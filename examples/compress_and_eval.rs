@@ -1,0 +1,80 @@
+//! Method shoot-out on a trained checkpoint: all six methods at one ratio.
+//!
+//!   cargo run --release --example compress_and_eval -- [--model m]
+//!       [--ratio 0.2] [--group 2] [--eval-batches 16]
+//!
+//! Requires a checkpoint (`drank train --model m`); falls back to the tiny
+//! quickstart-style model when none exists.
+
+use drank::calib::CalibOpts;
+use drank::compress::{pipeline, CompressOpts, Method};
+use drank::data::synlang::Domain;
+use drank::data::DataBundle;
+use drank::eval;
+use drank::model::{ckpt_path, ModelConfig, Weights};
+use drank::report::{fmt_ppl, Table};
+use drank::runtime::Engine;
+use drank::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let engine = Engine::open("artifacts")?;
+    let model = args.str_or("model", "m");
+    let weights = match Weights::load(&ckpt_path(&model)) {
+        Ok((w, step)) => {
+            println!("using checkpoint {} (step {step})", ckpt_path(&model));
+            w
+        }
+        Err(_) => {
+            println!("no checkpoint for {model}; training tiny stand-in (60 steps)");
+            let cfg = ModelConfig::by_name("tiny")?;
+            let data = DataBundle::build_cached(cfg.vocab, 1234, 1.0);
+            let opts = drank::runtime::trainer::TrainOpts { steps: 60, ..Default::default() };
+            drank::runtime::trainer::train(&engine, Weights::init(cfg, 0), &data, &opts)?
+                .final_weights
+        }
+    };
+    let data = DataBundle::build_cached(weights.config.vocab, 1234, 1.0);
+    let ratio = args.f64_or("ratio", 0.2);
+    let test = &data.domain(Domain::Wiki2s).test;
+    let max_b = args.usize_or("eval-batches", 16);
+
+    let dense_ppl = eval::ppl_dense(&engine, &weights, test, max_b)?;
+    let mut table = Table::new(
+        &format!("methods @ {:.0}% ({model})", ratio * 100.0),
+        &["Method", "Achieved", "wiki2s PPL"],
+    );
+    table.row(vec!["Original".into(), "0.00".into(), fmt_ppl(dense_ppl)]);
+
+    for method in [
+        Method::PlainSvd,
+        Method::Fwsvd,
+        Method::Asvd,
+        Method::SvdLlm,
+        Method::BasisSharing,
+        Method::DRank,
+    ] {
+        let opts = CompressOpts {
+            method,
+            ratio,
+            group_layers: args.usize_or("group", 2),
+            ..Default::default()
+        };
+        let copts = CalibOpts {
+            batches: args.usize_or("calib-batches", 12),
+            fisher: method == Method::Fwsvd,
+            ..Default::default()
+        };
+        let (m, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
+        let ppl = eval::ppl_compressed(&engine, &m, test, max_b)?;
+        table.row(vec![
+            method.name().into(),
+            format!("{:.2}", m.achieved_ratio()),
+            fmt_ppl(ppl),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    print!("{}", table.markdown());
+    Ok(())
+}

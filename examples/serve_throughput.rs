@@ -1,0 +1,97 @@
+//! Serving demo: dynamic-batched scoring server, dense vs compressed.
+//!
+//!   cargo run --release --example serve_throughput -- [--model m]
+//!       [--ratio 0.4] [--requests 120] [--clients 4]
+//!
+//! Mirrors the paper's Figure 4 setting: the compressed model's factored
+//! matmuls do less work per token, so served throughput rises with the
+//! compression ratio.
+
+use drank::calib::CalibOpts;
+use drank::compress::{pipeline, CompressOpts, Method};
+use drank::coordinator::{Server, ServerOpts};
+use drank::data::synlang::Domain;
+use drank::data::DataBundle;
+use drank::model::lowrank::CompressedModel;
+use drank::model::{ckpt_path, Weights};
+use drank::runtime::Engine;
+use drank::util::cli::Args;
+use drank::util::rng::Rng;
+
+fn run_load(
+    model: CompressedModel,
+    stream: Vec<u32>,
+    requests: usize,
+    clients: usize,
+) -> anyhow::Result<drank::coordinator::Metrics> {
+    let cfg = model.config();
+    let server = Server::spawn(
+        move || {
+            let rt = drank::runtime::Runtime::cpu()?;
+            drank::graph::compile_forward(&rt, &model, cfg.batch, cfg.seq)
+        },
+        ServerOpts::default(),
+    );
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let stream = stream.clone();
+        let seq = cfg.seq;
+        let per = requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            for _ in 0..per {
+                let start = rng.below(stream.len() - seq);
+                client.score(stream[start..start + seq].to_vec()).expect("score");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "m");
+    let (weights, _) = Weights::load(&ckpt_path(&model_name))
+        .or_else(|_| Weights::load(&ckpt_path("tiny")))
+        .map_err(|_| anyhow::anyhow!("train a model first: drank train --model {model_name}"))?;
+    let data = DataBundle::build_cached(weights.config.vocab, 1234, 1.0);
+    let stream = data.domain(Domain::Wiki2s).test.clone();
+    let requests = args.usize_or("requests", 120);
+    let clients = args.usize_or("clients", 4);
+    let ratio = args.f64_or("ratio", 0.4);
+
+    println!("== dense ==");
+    let dense = CompressedModel::dense_passthrough(weights.clone());
+    let m0 = run_load(dense, stream.clone(), requests, clients)?;
+    println!(
+        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}",
+        m0.throughput_tps(),
+        m0.p50_ms(),
+        m0.p99_ms(),
+        m0.mean_batch_occupancy()
+    );
+
+    println!("== compressed (D-Rank @ {:.0}%) ==", ratio * 100.0);
+    let engine = Engine::open("artifacts")?;
+    let opts = CompressOpts { method: Method::DRank, ratio, ..Default::default() };
+    let copts = CalibOpts { batches: 8, ..Default::default() };
+    let (compressed, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
+    drop(engine); // the server builds its own runtime
+    let m1 = run_load(compressed, stream, requests, clients)?;
+    println!(
+        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}",
+        m1.throughput_tps(),
+        m1.p50_ms(),
+        m1.p99_ms(),
+        m1.mean_batch_occupancy()
+    );
+    println!(
+        "speedup: {:.2}x",
+        m1.throughput_tps() / m0.throughput_tps().max(1e-9)
+    );
+    Ok(())
+}

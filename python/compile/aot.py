@@ -1,0 +1,237 @@
+"""AOT export: lower L2 entry points to HLO *text* artifacts + manifest.
+
+HLO text (NOT `lowered.compiler_ir('hlo').as_serialized_hlo_module_proto()`)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published `xla` crate)
+rejects with `proto.id() <= INT_MAX`; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts are pure functions of this package's sources; `make artifacts`
+re-runs only when inputs change. Python never runs after this step.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--configs tiny,m] [--kinds all]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_specs(cfg):
+    return [_spec(s) for _, s in cfg.param_shapes()]
+
+
+def _named(prefix, shapes, dtype="f32"):
+    return [
+        {"name": f"{prefix}{name}", "shape": list(shape), "dtype": dtype}
+        for name, shape in shapes
+    ]
+
+
+def build_entry(cfg, kind):
+    """Return (fn, example_specs, input_desc, output_desc) for an artifact."""
+    B, S = cfg.batch, cfg.seq
+    tok = _spec((B, S), jnp.int32)
+    tok_desc = [{"name": "tokens", "shape": [B, S], "dtype": "i32"}]
+    pshapes = cfg.param_shapes()
+    pspecs = _params_specs(cfg)
+    scalar = _spec(())
+
+    if kind == "dense_nll":
+        fn = lambda *a: (M.nll(a[:-1], a[-1], cfg, use_kernel=True),)
+        specs = pspecs + [tok]
+        ins = _named("", pshapes) + tok_desc
+        outs = [{"name": "nll", "shape": [B, S - 1], "dtype": "f32"}]
+    elif kind == "train_step":
+        n = len(pspecs)
+
+        def fn(*a):
+            params, m, v = a[:n], a[n : 2 * n], a[2 * n : 3 * n]
+            step, lr, tokens = a[3 * n], a[3 * n + 1], a[3 * n + 2]
+            loss, p2, m2, v2 = M.train_step(params, m, v, step, lr, tokens, cfg)
+            return (loss,) + p2 + m2 + v2
+
+        specs = pspecs * 3 + [scalar, scalar, tok]
+        ins = (
+            _named("", pshapes)
+            + _named("m_", pshapes)
+            + _named("v_", pshapes)
+            + [
+                {"name": "step", "shape": [], "dtype": "f32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+            ]
+            + tok_desc
+        )
+        outs = (
+            [{"name": "loss", "shape": [], "dtype": "f32"}]
+            + _named("", pshapes)
+            + _named("m_", pshapes)
+            + _named("v_", pshapes)
+        )
+    elif kind == "calib":
+        fn = lambda *a: M.calib_stats(a[:-1], a[-1], cfg)
+        specs = pspecs + [tok]
+        ins = _named("", pshapes) + tok_desc
+        L, d, dff = cfg.layers, cfg.d, cfg.dff
+        outs = _named(
+            "",
+            [
+                ("g_attn", (L, d, d)),
+                ("g_o", (L, d, d)),
+                ("g_mlp", (L, d, d)),
+                ("g_down", (L, dff, dff)),
+                ("a_attn", (L, d)),
+                ("a_o", (L, d)),
+                ("a_mlp", (L, d)),
+                ("a_down", (L, dff)),
+            ],
+        )
+    elif kind == "fisher":
+        fn = lambda *a: M.fisher_rows(a[:-1], a[-1], cfg)
+        specs = pspecs + [tok]
+        ins = _named("", pshapes) + tok_desc
+        outs = _named(
+            "f_",
+            [(t, (cfg.layers, cfg.matrix_dims(t)[0])) for t in M.COMPRESSIBLE],
+        )
+    elif kind == "lowrank_nll":
+        lshapes = M.lowrank_param_shapes(cfg)
+        lspecs = [_spec(s) for _, s in lshapes]
+        fn = lambda *a: (M.lowrank_nll(a[:-1], a[-1], cfg),)
+        specs = lspecs + [tok]
+        ins = _named("", lshapes) + tok_desc
+        outs = [{"name": "nll", "shape": [B, S - 1], "dtype": "f32"}]
+    elif kind == "lora_step":
+        lshapes = M.lowrank_param_shapes(cfg)
+        ashapes = M.adapter_shapes(cfg)
+        nl, na = len(lshapes), len(ashapes)
+        lspecs = [_spec(s) for _, s in lshapes]
+        aspecs = [_spec(s) for _, s in ashapes]
+
+        def fn(*a):
+            lp = a[:nl]
+            ad = a[nl : nl + na]
+            m = a[nl + na : nl + 2 * na]
+            v = a[nl + 2 * na : nl + 3 * na]
+            step, lr, tokens = a[nl + 3 * na], a[nl + 3 * na + 1], a[-1]
+            loss, a2, m2, v2 = M.lora_step(lp, ad, m, v, step, lr, tokens, cfg)
+            return (loss,) + a2 + m2 + v2
+
+        specs = lspecs + aspecs * 3 + [scalar, scalar, tok]
+        ins = (
+            _named("", lshapes)
+            + _named("", ashapes)
+            + _named("m_", ashapes)
+            + _named("v_", ashapes)
+            + [
+                {"name": "step", "shape": [], "dtype": "f32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+            ]
+            + tok_desc
+        )
+        outs = (
+            [{"name": "loss", "shape": [], "dtype": "f32"}]
+            + _named("", ashapes)
+            + _named("m_", ashapes)
+            + _named("v_", ashapes)
+        )
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return fn, specs, ins, outs
+
+
+ALL_KINDS = ["dense_nll", "train_step", "calib", "fisher", "lowrank_nll", "lora_step"]
+# Full artifact set only where tests / LoRA need it; the rest get the core 4.
+KIND_PLAN = {
+    "tiny": ALL_KINDS,
+    "s": ALL_KINDS[:4],
+    "m": ALL_KINDS,
+    "l": ALL_KINDS[:4],
+    "gqa": ALL_KINDS[:4],
+    "mist": ALL_KINDS[:4],
+}
+
+
+def export(cfg, kind, out_dir):
+    fn, specs, ins, outs = build_entry(cfg, kind)
+    # keep_unused: the wire format passes the full canonical parameter list
+    # even to entry points that don't read every tensor (e.g. calib never
+    # touches lm_head); without this XLA prunes the parameter and the Rust
+    # side's argument count no longer matches the manifest.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entry = {
+        "file": fname,
+        "config": cfg.name,
+        "kind": kind,
+        "shape": {
+            "vocab": cfg.vocab,
+            "d": cfg.d,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "dff": cfg.dff,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+        },
+        "inputs": ins,
+        "outputs": outs,
+    }
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, {len(ins)} in / {len(outs)} out)")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="all")
+    ap.add_argument("--kinds", default="plan")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(M.CONFIGS) if args.configs == "all" else args.configs.split(",")
+    manifest = {"artifacts": []}
+    for name in names:
+        cfg = M.CONFIGS[name]
+        kinds = KIND_PLAN[name] if args.kinds == "plan" else args.kinds.split(",")
+        print(f"config {name}: {kinds}")
+        for kind in kinds:
+            manifest["artifacts"].append(export(cfg, kind, args.out))
+    path = os.path.join(args.out, "manifest.json")
+    # merge with a pre-existing manifest (partial re-exports)
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        seen = {(a["config"], a["kind"]) for a in manifest["artifacts"]}
+        for a in old["artifacts"]:
+            if (a["config"], a["kind"]) not in seen:
+                manifest["artifacts"].append(a)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .attention import flash_attention
+from .gram import gram_accum
+from .lowrank import lowrank_apply, lowrank_matmul
+
+__all__ = ["flash_attention", "gram_accum", "lowrank_apply", "lowrank_matmul"]

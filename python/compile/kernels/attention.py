@@ -1,0 +1,92 @@
+"""Single-pass causal flash attention Pallas kernel.
+
+The GPU flash-attention kernel assigns a threadblock per q-tile and streams
+k/v tiles through shared memory with warp-level online softmax. The TPU
+mapping: grid = (batch*heads, q_tiles); each grid step holds one q-tile in
+VMEM and runs a fori_loop over kv-tiles, carrying the running max `m`,
+normalizer `l`, and output accumulator in registers/VMEM — no HBM traffic
+for intermediates and no separate softmax pass.
+
+VMEM per step: bq*hd (q) + 2*skv*hd (k,v panel) + bq*bk (scores tile)
+floats; at paper scale (skv=2048, hd=128, bq=bk=128): ~2.2 MiB. Causal
+masking is done per-tile with global position indices, so fully-masked
+tiles still stream (a real-TPU version would skip them via the grid;
+noted in DESIGN.md §Perf).
+
+interpret=True: Mosaic lowering is TPU-only; the CPU PJRT client executes
+the interpreted HLO. Numerics validated against kernels.ref.mha_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _pick_block(n, target):
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, skv, causal):
+    # q_ref: [1, bq, hd]; k_ref/v_ref: [1, skv, hd]; o_ref: [1, bq, hd]
+    hd = q_ref.shape[-1]
+    scale = 1.0 / (hd**0.5)
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, hd]
+    q_pos = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(t, carry):
+        acc, m_i, l_i = carry
+        k_tile = k_ref[0, pl.dslice(t * bk, bk), :].astype(jnp.float32)
+        v_tile = v_ref[0, pl.dslice(t * bk, bk), :].astype(jnp.float32)
+        s = q @ k_tile.T                                 # [bq, bk]
+        if causal:
+            k_pos = t * bk + jax.lax.iota(jnp.int32, bk)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))         # [bq]
+        p = jnp.exp(s - m_new[:, None])                  # [bq, bk]
+        alpha = jnp.exp(m_i - m_new)                     # [bq]
+        l_new = alpha * l_i + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, skv // bk, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, bq=64, bk=64):
+    """Causal attention over flattened heads.
+
+    q, k, v: [bh, s, hd] (bh = batch*heads; k/v already GQA-expanded)
+    returns [bh, s, hd].
+    """
+    bh, s, hd = q.shape
+    skv = k.shape[1]
+    bq = _pick_block(s, bq)
+    bk = _pick_block(skv, bk)
+    grid = (bh, s // bq)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, skv=skv, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, skv, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, skv, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)

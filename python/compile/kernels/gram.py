@@ -1,0 +1,57 @@
+"""Gram accumulation Pallas kernel: G = X^T X.
+
+The calibration hot loop: every compression method here whitens with (or
+scales by statistics of) the per-projection input Gram matrix, accumulated
+over 10^5..10^6 calibration tokens. On GPU the usual mapping is split-K
+with atomics; the TPU mapping is a grid reduction:
+
+  grid = (k_tiles,) over the token axis; each step loads a (bk × d) slice
+  of X into VMEM and accumulates X_tile^T X_tile into the (d × d) output
+  block, which stays resident in VMEM across the whole grid (the output
+  index_map is constant — the canonical TPU accumulation pattern).
+
+VMEM per step: bk*d + d*d floats; paper-scale d=4096 needs f32 d×d = 64 MiB
+so the real-TPU variant tiles d into 128-column panels; at our scales
+(d<=512) the whole Gram fits VMEM directly and we keep the simple schedule.
+Accumulation is always f32 regardless of input dtype (whitening is
+precision-critical; the paper uses FP64 for S — we re-accumulate in f64 on
+the Rust side from per-batch f32 partials).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n, target):
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _gram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def gram_accum(x, bk=128):
+    """G = X^T X for x: [n, d] -> [d, d] float32."""
+    n, d = x.shape
+    bk = _pick_block(n, bk)
+    grid = (n // bk,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here; pytest asserts
+`assert_allclose(kernel(...), ref(...))` over hypothesis-driven shape/dtype
+sweeps. The oracles are also what the L2 model uses on differentiated paths
+where a kernel has no custom VJP.
+"""
+
+import jax.numpy as jnp
+
+
+def lowrank_matmul_ref(x, b, c):
+    """y = (x @ B) @ C — the factored linear layer.
+
+    x: [..., d1], b: [d1, k], c: [k, d2] -> y: [..., d2]
+    """
+    return (x @ b) @ c
+
+
+def gram_ref(x):
+    """G = X^T X over all leading axes.
+
+    x: [n, d] -> [d, d] (float32 accumulation).
+    """
+    x = x.astype(jnp.float32)
+    return x.T @ x
+
+
+def attention_ref(q, k, v, causal=True):
+    """Masked scaled-dot-product attention, one head.
+
+    q: [sq, hd], k: [skv, hd], v: [skv, hd] -> [sq, hd]
+    """
+    hd = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    if causal:
+        sq, skv = scores.shape
+        # positions are aligned at the end (supports skv >= sq prefixes)
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        scores = jnp.where(ki <= qi, scores, jnp.finfo(scores.dtype).min)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha_ref(q, k, v, causal=True):
+    """Batched multi-head attention via attention_ref semantics.
+
+    q: [b, h, sq, hd], k/v: [b, h, skv, hd] -> [b, h, sq, hd]
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(hd, q.dtype)
+    )
+    if causal:
+        sq, skv = scores.shape[-2:]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        scores = jnp.where(ki <= qi, scores, jnp.finfo(scores.dtype).min)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,442 @@
+"""L2: the tinylm transformer family in JAX (build-time only).
+
+This module defines the *exact* model semantics that the Rust side
+re-implements twice (pure-Rust reference forward in `rust/src/model/fwd.rs`
+and the runtime XlaBuilder graph in `rust/src/graph/`). Any change here must
+be mirrored there; the integration tests cross-check all three.
+
+Architecture (LLaMA-class, no biases):
+  - RMSNorm, eps = 1e-5:       y = x / sqrt(mean(x^2) + eps) * w
+  - rotary position embedding: theta = 1e4, rotate-half convention
+  - attention:                 causal, scale 1/sqrt(hd), GQA via head repeat
+  - MLP:                       silu(x @ W_gate) * (x @ W_up) @ W_down
+  - logits:                    rmsnorm(x) @ lm_head  (untied embedding)
+
+Canonical parameter order (stacked per type — this is the wire format the
+Rust runtime passes to every artifact, in this order):
+   0 embed      [V, d]
+   1 attn_norm  [L, d]
+   2 wq         [L, d, d]
+   3 wk         [L, d, kvd]      kvd = kv_heads * head_dim
+   4 wv         [L, d, kvd]
+   5 wo         [L, d, d]
+   6 mlp_norm   [L, d]
+   7 w_gate     [L, d, dff]
+   8 w_up       [L, d, dff]
+   9 w_down     [L, dff, d]
+  10 final_norm [d]
+  11 lm_head    [d, V]
+
+All linear layers use the row-vector convention y = x @ W with
+W in R^{d_in x d_out} — W_K of a GQA model is [d, kvd] with kvd < d,
+matching the paper's LLaMA-3 W_K in R^{4096x1024}.
+"""
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, gram_accum, lowrank_matmul
+from .kernels.ref import mha_ref
+
+EPS = 1e-5
+ROPE_THETA = 1e4
+N_PARAMS = 12
+# compressible weight types, in canonical order
+COMPRESSIBLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Shape configuration of a tinylm variant."""
+
+    name: str
+    vocab: int
+    d: int
+    layers: int
+    heads: int
+    kv_heads: int
+    dff: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    @property
+    def kvd(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def gqa(self) -> bool:
+        return self.kv_heads < self.heads
+
+    def param_shapes(self):
+        L, d, dff, V = self.layers, self.d, self.dff, self.vocab
+        kvd = self.kvd
+        return [
+            ("embed", (V, d)),
+            ("attn_norm", (L, d)),
+            ("wq", (L, d, d)),
+            ("wk", (L, d, kvd)),
+            ("wv", (L, d, kvd)),
+            ("wo", (L, d, d)),
+            ("mlp_norm", (L, d)),
+            ("w_gate", (L, d, dff)),
+            ("w_up", (L, d, dff)),
+            ("w_down", (L, dff, d)),
+            ("final_norm", (d,)),
+            ("lm_head", (d, V)),
+        ]
+
+    def matrix_dims(self, typ: str) -> Tuple[int, int]:
+        """(d1, d2) of one layer's matrix of the given compressible type."""
+        d, dff, kvd = self.d, self.dff, self.kvd
+        return {
+            "wq": (d, d),
+            "wk": (d, kvd),
+            "wv": (d, kvd),
+            "wo": (d, d),
+            "w_gate": (d, dff),
+            "w_up": (d, dff),
+            "w_down": (dff, d),
+        }[typ]
+
+    def kmax(self, typ: str) -> int:
+        """Break-even rank: beyond this a factored layer is larger/slower."""
+        d1, d2 = self.matrix_dims(typ)
+        return (d1 * d2) // (d1 + d2)
+
+
+# The model zoo. Multiple logical models (llama-7b / llama-2-7b analogs)
+# share a shape config and therefore share HLO artifacts.
+CONFIGS = {
+    "tiny": Config("tiny", 256, 64, 2, 4, 4, 176, 64, 2),
+    "s": Config("s", 512, 64, 4, 4, 4, 176, 96, 4),
+    "m": Config("m", 512, 96, 6, 6, 6, 256, 96, 4),
+    "l": Config("l", 512, 128, 8, 8, 8, 344, 96, 4),
+    "gqa": Config("gqa", 512, 96, 6, 6, 2, 256, 96, 4),
+    "mist": Config("mist", 512, 96, 6, 6, 3, 288, 96, 4),
+}
+
+
+def init_params(cfg: Config, key):
+    """Normal(0, 0.02) init, norms at 1 (matches rust model::init)."""
+    out = []
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if "norm" in name:
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+def rmsnorm(x, w):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * w
+
+
+def rope_cos_sin(seq: int, hd: int):
+    """[seq, hd/2] cos/sin tables, theta = 1e4."""
+    half = hd // 2
+    freqs = ROPE_THETA ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, T, H, hd]; rotate-half: (x1, x2) -> (x1 c - x2 s, x2 c + x1 s)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _attention(x, wq, wk, wv, wo, cfg: Config, use_kernel: bool):
+    """One attention block (pre-normed input x)."""
+    B, T, d = x.shape
+    H, KVH, hd = cfg.heads, cfg.kv_heads, cfg.head_dim
+    q = (x @ wq).reshape(B, T, H, hd)
+    k = (x @ wk).reshape(B, T, KVH, hd)
+    v = (x @ wv).reshape(B, T, KVH, hd)
+    cos, sin = rope_cos_sin(T, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if KVH != H:
+        rep = H // KVH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # [B, T, H, hd] -> [B, H, T, hd]
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    if use_kernel:
+        o = flash_attention(
+            q.reshape(B * H, T, hd),
+            k.reshape(B * H, T, hd),
+            v.reshape(B * H, T, hd),
+        ).reshape(B, H, T, hd)
+    else:
+        o = mha_ref(q, k, v)  # differentiable reference path
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d)
+    return o @ wo, o  # (block output, input to wo)
+
+
+def _mlp(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down, h  # (block output, input to w_down)
+
+
+def forward_hidden(params, tokens, cfg: Config, use_kernel: bool):
+    """Token ids -> final hidden states [B, T, d] (scan over layers)."""
+    embed = params[0]
+    x = embed[tokens]
+
+    def block(x, layer):
+        an, wq, wk, wv, wo, mn, wg, wu, wd = layer
+        attn_out, _ = _attention(rmsnorm(x, an), wq, wk, wv, wo, cfg, use_kernel)
+        x = x + attn_out
+        mlp_out, _ = _mlp(rmsnorm(x, mn), wg, wu, wd)
+        return x + mlp_out, None
+
+    layers = tuple(params[i] for i in range(1, 10))
+    x, _ = jax.lax.scan(block, x, layers)
+    return rmsnorm(x, params[10])
+
+
+def nll(params, tokens, cfg: Config, use_kernel: bool = True):
+    """Per-token negative log likelihood. tokens [B, S] -> nll [B, S-1]."""
+    h = forward_hidden(params, tokens[:, :-1], cfg, use_kernel)
+    logits = h @ params[11]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return logz - picked
+
+
+def mean_loss(params, tokens, cfg: Config, use_kernel: bool = False):
+    return jnp.mean(nll(params, tokens, cfg, use_kernel))
+
+
+# ----------------------------------------------------------------------------
+# training (Adam + global-norm clipping)
+
+ADAM_B1, ADAM_B2, ADAM_EPS, CLIP = 0.9, 0.95, 1e-8, 1.0
+# Decoupled weight decay on matrix params (AdamW). Besides regularizing,
+# this is what gives trained transformers their structured spectra: unused
+# weight directions decay toward zero, so SVD truncation meaningfully
+# separates signal from noise — the regime the paper's method targets.
+WEIGHT_DECAY = 0.1
+
+
+def train_step(params, m, v, step, lr, tokens, cfg: Config):
+    """One AdamW step. Returns (loss, params', m', v').
+
+    `step` is the 1-based step counter as f32 (bias correction);
+    `lr` a f32 scalar so the Rust trainer owns the schedule.
+    """
+    loss, grads = jax.value_and_grad(mean_loss)(params, tokens, cfg)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    scale = jnp.minimum(1.0, CLIP / (gnorm + 1e-12))
+    grads = tuple(g * scale for g in grads)
+    b1c = 1.0 - ADAM_B1**step
+    b2c = 1.0 - ADAM_B2**step
+    names = [n for n, _ in cfg.param_shapes()]
+    new_p, new_m, new_v = [], [], []
+    for name, p, mi, vi, g in zip(names, params, m, v, grads):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (mi / b1c) / (jnp.sqrt(vi / b2c) + ADAM_EPS)
+        wd = 0.0 if "norm" in name or name == "embed" else WEIGHT_DECAY
+        new_p.append(p - lr * (update + wd * p))
+        new_m.append(mi)
+        new_v.append(vi)
+    return loss, tuple(new_p), tuple(new_m), tuple(new_v)
+
+
+# ----------------------------------------------------------------------------
+# calibration statistics (grams for whitening, |x| means for ASVD)
+
+
+def calib_stats(params, tokens, cfg: Config):
+    """Per-layer input statistics for every compressible projection.
+
+    Returns 8 arrays:
+      g_attn [L,d,d], g_o [L,d,d], g_mlp [L,d,d], g_down [L,dff,dff]
+      a_attn [L,d],   a_o [L,d],   a_mlp [L,d],   a_down [L,dff]
+    where g_* = sum over tokens of X^T X (f32, via the Pallas gram kernel)
+    and a_* = sum over tokens of |x|. The division by token count and the
+    f64 re-accumulation across batches happen on the Rust side.
+    """
+    embed = params[0]
+    x = embed[tokens]
+
+    def block(x, layer):
+        an, wq, wk, wv, wo, mn, wg, wu, wd = layer
+        x_attn = rmsnorm(x, an)
+        attn_out, x_o = _attention(x_attn, wq, wk, wv, wo, cfg, True)
+        x = x + attn_out
+        x_mlp = rmsnorm(x, mn)
+        mlp_out, x_down = _mlp(x_mlp, wg, wu, wd)
+        x = x + mlp_out
+
+        def stats(t):
+            flat = t.reshape(-1, t.shape[-1])
+            return gram_accum(flat), jnp.sum(jnp.abs(flat), axis=0)
+
+        ga, aa = stats(x_attn)
+        go, ao = stats(x_o)
+        gm, am = stats(x_mlp)
+        gd, ad = stats(x_down)
+        return x, (ga, go, gm, gd, aa, ao, am, ad)
+
+    layers = tuple(params[i] for i in range(1, 10))
+    _, ys = jax.lax.scan(block, x, layers)
+    return ys
+
+
+# ----------------------------------------------------------------------------
+# Fisher rows (FWSVD): row-aggregated squared gradients of the LM loss
+
+
+def fisher_rows(params, tokens, cfg: Config):
+    """sum over output axis of grad^2, for each compressible type.
+
+    Returns 7 arrays in COMPRESSIBLE order: [L, d_in] each.
+    """
+    grads = jax.grad(mean_loss)(params, tokens, cfg)
+    idx = {"wq": 2, "wk": 3, "wv": 4, "wo": 5, "w_gate": 7, "w_up": 8, "w_down": 9}
+    return tuple(jnp.sum(jnp.square(grads[idx[t]]), axis=-1) for t in COMPRESSIBLE)
+
+
+# ----------------------------------------------------------------------------
+# rank-padded low-rank forward (exercises the Pallas lowrank kernel) + LoRA
+
+LORA_RANK, LORA_ALPHA = 8, 32.0
+
+
+def lowrank_param_shapes(cfg: Config):
+    """Factored parameter list: each compressible W becomes (B, C) padded to
+    kpad = min(d1, d2); non-compressible params stay dense.
+
+    Full-rank padding (not break-even kmax) because grouped Basis-Sharing
+    allocations can exceed the per-layer break-even rank — zero columns are
+    exact, so padded execution matches the unpadded factored model.
+
+    Order: embed, attn_norm, (bq,cq), (bk,ck), (bv,cv), (bo,co), mlp_norm,
+           (bg,cg), (bu,cu), (bd,cd), final_norm, lm_head   (19 tensors)
+    """
+    L = cfg.layers
+    shapes = [("embed", (cfg.vocab, cfg.d)), ("attn_norm", (L, cfg.d))]
+    for typ in ("wq", "wk", "wv", "wo"):
+        d1, d2 = cfg.matrix_dims(typ)
+        k = min(d1, d2)
+        shapes += [(f"{typ}_b", (L, d1, k)), (f"{typ}_c", (L, k, d2))]
+        if typ == "wo":
+            shapes.append(("mlp_norm", (L, cfg.d)))
+    for typ in ("w_gate", "w_up", "w_down"):
+        d1, d2 = cfg.matrix_dims(typ)
+        k = min(d1, d2)
+        shapes += [(f"{typ}_b", (L, d1, k)), (f"{typ}_c", (L, k, d2))]
+    shapes += [("final_norm", (cfg.d,)), ("lm_head", (cfg.d, cfg.vocab))]
+    return shapes
+
+
+def _lr_apply(x, b, c):
+    """Factored linear over [B, T, d1] via the Pallas kernel."""
+    Bz, T, d1 = x.shape
+    y = lowrank_matmul(x.reshape(Bz * T, d1), b, c)
+    return y.reshape(Bz, T, c.shape[-1])
+
+
+def lowrank_forward_hidden(lr_params, tokens, cfg: Config, adapters=None):
+    """Forward through the factored model; optional LoRA adapters.
+
+    lr_params: tuple in lowrank_param_shapes order.
+    adapters: optional tuple of 14 tensors (p, q per COMPRESSIBLE type),
+              p [L, d1, r], q [L, r, d2]; y += (alpha/r) * x p q.
+    """
+    (embed, attn_norm, bq, cq, bk, ck, bv, cv, bo, co, mlp_norm,
+     bg, cg, bu, cu, bd, cd, final_norm, lm_head) = lr_params
+    x = embed[tokens]
+    scale = LORA_ALPHA / LORA_RANK
+
+    def proj(x, b, c, ad):
+        y = _lr_apply(x, b, c)
+        if ad is not None:
+            p, q = ad
+            y = y + scale * ((x @ p) @ q)
+        return y
+
+    def ad(i, l):
+        if adapters is None:
+            return None
+        return (adapters[2 * i][l], adapters[2 * i + 1][l])
+
+    B, T = tokens.shape
+    H, KVH, hd = cfg.heads, cfg.kv_heads, cfg.head_dim
+    cos, sin = rope_cos_sin(T, hd)
+    for l in range(cfg.layers):
+        xa = rmsnorm(x, attn_norm[l])
+        q = proj(xa, bq[l], cq[l], ad(0, l)).reshape(B, T, H, hd)
+        k = proj(xa, bk[l], ck[l], ad(1, l)).reshape(B, T, KVH, hd)
+        v = proj(xa, bv[l], cv[l], ad(2, l)).reshape(B, T, KVH, hd)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        if KVH != H:
+            k = jnp.repeat(k, H // KVH, axis=2)
+            v = jnp.repeat(v, H // KVH, axis=2)
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = mha_ref(qt, kt, vt).transpose(0, 2, 1, 3).reshape(B, T, cfg.d)
+        x = x + proj(o, bo[l], co[l], ad(3, l))
+        xm = rmsnorm(x, mlp_norm[l])
+        h = jax.nn.silu(proj(xm, bg[l], cg[l], ad(4, l))) * proj(
+            xm, bu[l], cu[l], ad(5, l)
+        )
+        x = x + proj(h, bd[l], cd[l], ad(6, l))
+    return rmsnorm(x, final_norm)
+
+
+def lowrank_nll(lr_params, tokens, cfg: Config, adapters=None):
+    h = lowrank_forward_hidden(lr_params, tokens[:, :-1], cfg, adapters)
+    logits = h @ lr_params[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return logz - picked
+
+
+def lora_step(lr_params, adapters, m, v, step, lr, tokens, cfg: Config):
+    """One Adam step on the LoRA adapters of a frozen compressed model."""
+
+    def loss_fn(ad):
+        return jnp.mean(lowrank_nll(lr_params, tokens, cfg, ad))
+
+    loss, grads = jax.value_and_grad(loss_fn)(adapters)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    scale = jnp.minimum(1.0, CLIP / (gnorm + 1e-12))
+    grads = tuple(g * scale for g in grads)
+    b1c = 1.0 - ADAM_B1**step
+    b2c = 1.0 - ADAM_B2**step
+    new_a, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(adapters, m, v, grads):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+        new_a.append(p - lr * (mi / b1c) / (jnp.sqrt(vi / b2c) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return loss, tuple(new_a), tuple(new_m), tuple(new_v)
+
+
+def adapter_shapes(cfg: Config):
+    """14 tensors: (p, q) per compressible type, LoRA rank 8."""
+    shapes = []
+    for typ in COMPRESSIBLE:
+        d1, d2 = cfg.matrix_dims(typ)
+        shapes += [
+            (f"{typ}_p", (cfg.layers, d1, LORA_RANK)),
+            (f"{typ}_q", (cfg.layers, LORA_RANK, d2)),
+        ]
+    return shapes

@@ -1,0 +1,270 @@
+"""L2 model semantics: shapes, path equivalences, training behaviour.
+
+These pin down the exact semantics the Rust side re-implements.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels.gram import gram_accum
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["tiny"]
+GQA_CFG = M.Config("tiny_gqa", 256, 64, 2, 4, 2, 176, 64, 2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    r = np.random.default_rng(0)
+    return jnp.asarray(r.integers(0, CFG.vocab, (CFG.batch, CFG.seq)), jnp.int32)
+
+
+def test_param_shapes_canonical_order(params):
+    names = [n for n, _ in CFG.param_shapes()]
+    assert names == [
+        "embed", "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm",
+        "w_gate", "w_up", "w_down", "final_norm", "lm_head",
+    ]
+    for p, (_, shape) in zip(params, CFG.param_shapes()):
+        assert p.shape == shape
+
+
+def test_rmsnorm_matches_manual():
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.standard_normal((3, 8), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal(8, dtype=np.float32))
+    got = M.rmsnorm(x, w)
+    want = x / np.sqrt(np.mean(np.square(np.asarray(x)), -1, keepdims=True) + 1e-5) * w
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_norm_preserving():
+    """Rotary is a rotation: per-pair norms are preserved."""
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.standard_normal((1, 16, 2, 32), dtype=np.float32))
+    cos, sin = M.rope_cos_sin(16, 32)
+    y = np.asarray(M.apply_rope(x, cos, sin))
+    x = np.asarray(x)
+    n_x = x[..., :16] ** 2 + x[..., 16:] ** 2
+    n_y = y[..., :16] ** 2 + y[..., 16:] ** 2
+    assert_allclose(n_x, n_y, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_position_zero_identity():
+    x = jnp.ones((1, 4, 1, 16), jnp.float32)
+    cos, sin = M.rope_cos_sin(4, 16)
+    y = np.asarray(M.apply_rope(x, cos, sin))
+    assert_allclose(y[0, 0], np.ones((1, 16)), rtol=1e-6, atol=1e-6)
+
+
+def test_nll_kernel_and_ref_paths_agree(params, tokens):
+    """Pallas flash-attention path == jnp reference path."""
+    a = M.nll(params, tokens, CFG, use_kernel=True)
+    b = M.nll(params, tokens, CFG, use_kernel=False)
+    assert a.shape == (CFG.batch, CFG.seq - 1)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_nll_is_positive_and_reasonable(params, tokens):
+    nll = np.asarray(M.nll(params, tokens, CFG))
+    assert np.isfinite(nll).all()
+    # fresh random model over V=256 ≈ uniform: nll ≈ log(256) ≈ 5.55
+    assert abs(nll.mean() - np.log(CFG.vocab)) < 1.0
+
+
+def test_gqa_forward_shapes():
+    params = M.init_params(GQA_CFG, jax.random.PRNGKey(1))
+    assert params[3].shape == (2, 64, 32)  # wk slimmed: kvd = 2 * 16
+    r = np.random.default_rng(3)
+    toks = jnp.asarray(r.integers(0, 256, (2, 64)), jnp.int32)
+    nll = M.nll(params, toks, GQA_CFG)
+    assert np.isfinite(np.asarray(nll)).all()
+
+
+def test_gqa_with_repeated_kv_equals_mha():
+    """A GQA model whose kv heads are replicated == the MHA model."""
+    mha = M.init_params(CFG, jax.random.PRNGKey(2))
+    gqa = list(M.init_params(GQA_CFG, jax.random.PRNGKey(2)))
+    # build MHA wk/wv by repeating each GQA kv head across the group
+    hd = GQA_CFG.head_dim
+    rep = CFG.heads // GQA_CFG.kv_heads
+    for idx in (3, 4):
+        w = np.asarray(gqa[idx])  # [L, d, kvd]
+        L, d, kvd = w.shape
+        heads = w.reshape(L, d, GQA_CFG.kv_heads, hd)
+        full = np.repeat(heads, rep, axis=2).reshape(L, d, CFG.heads * hd)
+        mha = list(mha)
+        mha[idx] = jnp.asarray(full)
+    # share every other weight
+    for i in range(12):
+        if i not in (3, 4):
+            mha[i] = gqa[i]
+    r = np.random.default_rng(4)
+    toks = jnp.asarray(r.integers(0, 256, (2, 64)), jnp.int32)
+    a = M.nll(tuple(mha), toks, CFG, use_kernel=False)
+    b = M.nll(tuple(gqa), toks, GQA_CFG, use_kernel=False)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_train_step_learns_repetition():
+    """A few steps on a constant batch must reduce its loss."""
+    cfg = M.CONFIGS["tiny"]
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    m = tuple(jnp.zeros_like(p) for p in params)
+    v = tuple(jnp.zeros_like(p) for p in params)
+    r = np.random.default_rng(5)
+    toks = jnp.asarray(r.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    step_fn = jax.jit(
+        lambda p, m, v, s, t: M.train_step(p, m, v, s, 3e-3, t, cfg)
+    )
+    losses = []
+    for s in range(8):
+        loss, params, m, v = step_fn(params, m, v, float(s + 1), toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_calib_stats_layer0_gram_matches_direct(params, tokens):
+    """g_attn[0] must equal gram of rmsnorm(embed[tokens], attn_norm[0])."""
+    outs = M.calib_stats(params, tokens, CFG)
+    g_attn = np.asarray(outs[0])
+    x = params[0][tokens]
+    x0 = M.rmsnorm(x, params[1][0]).reshape(-1, CFG.d)
+    want = np.asarray(gram_accum(x0))
+    assert_allclose(g_attn[0], want, rtol=1e-3, atol=1e-3)
+    # symmetry + PSD for all grams
+    for gi in range(4):
+        g = np.asarray(outs[gi]).astype(np.float64)
+        for l in range(CFG.layers):
+            assert_allclose(g[l], g[l].T, rtol=1e-4, atol=1e-2)
+            assert np.linalg.eigvalsh(g[l]).min() > -1e-2
+    # absmean sums are nonnegative
+    for ai in range(4, 8):
+        assert np.asarray(outs[ai]).min() >= 0.0
+
+
+def test_fisher_rows_match_finite_difference(params, tokens):
+    """Spot-check d(loss)/d(wq[0,i,:]) row energy via central differences."""
+    rows = M.fisher_rows(params, tokens, CFG)
+    assert len(rows) == 7
+    f_q = np.asarray(rows[0])
+    assert f_q.shape == (CFG.layers, CFG.d)
+    assert (np.asarray(r).min() >= 0.0 for r in rows)
+    # FD on two coordinates of wq[0]
+    g = jax.grad(M.mean_loss)(params, tokens, CFG)[2]
+    eps = 1e-3
+    for (i, j) in [(0, 0), (5, 7)]:
+        w = np.asarray(params[2])
+        wp, wm = w.copy(), w.copy()
+        wp[0, i, j] += eps
+        wm[0, i, j] -= eps
+        pp = list(params); pp[2] = jnp.asarray(wp)
+        pm = list(params); pm[2] = jnp.asarray(wm)
+        fd = (
+            float(M.mean_loss(tuple(pp), tokens, CFG))
+            - float(M.mean_loss(tuple(pm), tokens, CFG))
+        ) / (2 * eps)
+        assert abs(fd - float(g[0, i, j])) < 5e-3
+
+
+def _svd_factors(w, k):
+    u, s, vt = np.linalg.svd(np.asarray(w, np.float64), full_matrices=False)
+    b = (u[:, :k] * s[:k]).astype(np.float32)
+    c = vt[:k].astype(np.float32)
+    return b, c
+
+
+def _padded_lowrank_params(params, cfg):
+    """Exact factorization of each W padded with zeros to kmax."""
+    lp = [params[0], params[1]]
+    by_type = {"wq": 2, "wk": 3, "wv": 4, "wo": 5, "w_gate": 7, "w_up": 8,
+               "w_down": 9}
+    order = ["wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"]
+    for typ in order:
+        if typ == "mlp_norm":
+            lp.append(params[6])
+            continue
+        w = np.asarray(params[by_type[typ]])
+        L = w.shape[0]
+        d1, d2 = cfg.matrix_dims(typ)
+        kmax = min(d1, d2)
+        bs = np.zeros((L, d1, kmax), np.float32)
+        cs = np.zeros((L, kmax, d2), np.float32)
+        for l in range(L):
+            k = min(kmax, min(d1, d2))
+            b, c = _svd_factors(w[l], k)
+            bs[l, :, :k] = b
+            cs[l, :k] = c
+        lp += [jnp.asarray(bs), jnp.asarray(cs)]
+    lp += [params[10], params[11]]
+    return tuple(lp)
+
+
+def test_lowrank_nll_matches_dense_reconstruction(params, tokens):
+    """Factored path at full break-even rank ~= dense path with the same
+    truncated reconstruction (here rank kmax >= full rank for square mats is
+    false, so compare against dense model rebuilt from B@C)."""
+    lp = _padded_lowrank_params(params, CFG)
+    got = np.asarray(M.lowrank_nll(lp, tokens, CFG))
+    # rebuild an equivalent dense model from the factors
+    dense = list(params)
+    lpi = {"wq": 2, "wk": 4, "wv": 6, "wo": 8, "w_gate": 11, "w_up": 13,
+           "w_down": 15}
+    pi = {"wq": 2, "wk": 3, "wv": 4, "wo": 5, "w_gate": 7, "w_up": 8,
+          "w_down": 9}
+    for typ, li in lpi.items():
+        b, c = np.asarray(lp[li]), np.asarray(lp[li + 1])
+        dense[pi[typ]] = jnp.asarray(np.einsum("lik,lkj->lij", b, c))
+    want = np.asarray(M.nll(tuple(dense), tokens, CFG, use_kernel=False))
+    assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_lora_step_reduces_loss(params, tokens):
+    lp = _padded_lowrank_params(params, CFG)
+    adapters, m, v = [], [], []
+    r = np.random.default_rng(7)
+    for name, shape in M.adapter_shapes(CFG):
+        init = (
+            0.02 * r.standard_normal(shape).astype(np.float32)
+            if name.endswith("_p")
+            else np.zeros(shape, np.float32)
+        )
+        adapters.append(jnp.asarray(init))
+        m.append(jnp.zeros(shape, jnp.float32))
+        v.append(jnp.zeros(shape, jnp.float32))
+    adapters, m, v = tuple(adapters), tuple(m), tuple(v)
+    step_fn = jax.jit(
+        lambda a, m, v, s, t: M.lora_step(lp, a, m, v, s, 1e-3, t, CFG)
+    )
+    losses = []
+    for s in range(6):
+        loss, adapters, m, v = step_fn(adapters, m, v, float(s + 1), tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_zero_adapters_are_identity(params, tokens):
+    """q-side zeros => adapters contribute nothing."""
+    lp = _padded_lowrank_params(params, CFG)
+    adapters = []
+    r = np.random.default_rng(8)
+    for name, shape in M.adapter_shapes(CFG):
+        init = (
+            0.5 * r.standard_normal(shape).astype(np.float32)
+            if name.endswith("_p")
+            else np.zeros(shape, np.float32)
+        )
+        adapters.append(jnp.asarray(init))
+    a = np.asarray(M.lowrank_nll(lp, tokens, CFG, tuple(adapters)))
+    b = np.asarray(M.lowrank_nll(lp, tokens, CFG, None))
+    assert_allclose(a, b, rtol=1e-5, atol=1e-5)

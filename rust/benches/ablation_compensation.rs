@@ -1,0 +1,47 @@
+//! Ablation: sequential compensation (paper §4.1 — "we adaptively update
+//! the downstream layer weights using the deviated inputs" at ratios ≥40%).
+//!
+//! Compares compensation off vs on for SVD-LLM and D-Rank at 40% and 50%.
+//! Expected shape: compensation helps at high ratios (whitening against
+//! the activations the compressed prefix actually produces).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::{pipeline, CompressOpts, Method};
+use drank::data::synlang::Domain;
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("m");
+    let ratios = [0.4, 0.5];
+
+    let mut t = Table::new(
+        "Ablation: sequential compensation (m, wiki2s)",
+        &["Method", "40%", "40%+comp", "50%", "50%+comp"],
+    );
+    for method in [Method::SvdLlm, Method::DRank] {
+        let mut cells = vec![method.name().to_string()];
+        for &ratio in &ratios {
+            for compensate in [false, true] {
+                let opts = CompressOpts {
+                    method,
+                    ratio,
+                    group_layers: 2,
+                    compensate,
+                    ..Default::default()
+                };
+                let copts = b.calib_opts(Domain::Wiki2s, false);
+                let (model, _) = pipeline::compress_model(
+                    &b.engine, &b.weights, &b.data, &copts, &opts,
+                )
+                .expect("compress");
+                cells.push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+                eprint!(".");
+            }
+        }
+        t.row(cells);
+        eprintln!(" {} done", method.name());
+    }
+    common::emit(&t, "ablation_compensation");
+}

@@ -1,0 +1,139 @@
+//! Shared setup for the paper-table benches.
+//!
+//! Each bench is a `harness = false` binary that regenerates one table or
+//! figure from the paper (criterion is unavailable offline). Benches need a
+//! trained checkpoint — run `make train` (or `drank train --model <m>`)
+//! first; benches fail with a clear message otherwise.
+//!
+//! Env knobs (all optional):
+//!   DRANK_FAST=1            cheaper grids (fewer ratios/items)
+//!   DRANK_EVAL_BATCHES=n    PPL eval batches per domain (default 16)
+//!   DRANK_TASK_ITEMS=n      items per zero-shot suite (default 60)
+//!   DRANK_CALIB_BATCHES=n   calibration batches (default 12)
+
+#![allow(dead_code)]
+
+use drank::calib::{CalibOpts, CalibStats};
+use drank::compress::{pipeline, CompressOpts, Method};
+use drank::data::synlang::Domain;
+use drank::data::DataBundle;
+use drank::eval;
+use drank::model::{ckpt_path, Weights};
+use drank::report::Table;
+use drank::runtime::Engine;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn fast() -> bool {
+    std::env::var("DRANK_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn eval_batches() -> usize {
+    env_usize("DRANK_EVAL_BATCHES", 16)
+}
+
+pub fn task_items() -> usize {
+    env_usize("DRANK_TASK_ITEMS", 60)
+}
+
+pub fn calib_batches() -> usize {
+    env_usize("DRANK_CALIB_BATCHES", 12)
+}
+
+pub struct Bench {
+    pub engine: Engine,
+    pub weights: Weights,
+    pub data: DataBundle,
+}
+
+/// Load everything a bench needs for a logical model.
+pub fn setup(model: &str) -> Bench {
+    let engine = Engine::open("artifacts").expect("run `make artifacts` first");
+    let (weights, step) = Weights::load(&ckpt_path(model)).unwrap_or_else(|_| {
+        panic!("no checkpoint for '{model}' — run `./target/release/drank train --model {model}` first")
+    });
+    eprintln!("[bench] {model}: checkpoint at step {step}");
+    let data = DataBundle::build_cached(weights.config.vocab, 1234, 1.0);
+    Bench { engine, weights, data }
+}
+
+impl Bench {
+    pub fn calib_opts(&self, domain: Domain, fisher: bool) -> CalibOpts {
+        CalibOpts { domain, batches: calib_batches(), seed: 13, fisher }
+    }
+
+    /// Calibrate once (optionally with Fisher rows for FWSVD).
+    pub fn calibrate(&self, domain: Domain, fisher: bool) -> CalibStats {
+        drank::calib::run(&self.engine, &self.weights, &self.data, &self.calib_opts(domain, fisher))
+            .expect("calibration")
+    }
+
+    /// Compress with pre-computed stats (no compensation path).
+    pub fn compress(
+        &self,
+        stats: &CalibStats,
+        opts: &CompressOpts,
+    ) -> drank::model::lowrank::CompressedModel {
+        // compensation needs the engine+data; route through the pipeline
+        if opts.compensate {
+            let copts = self.calib_opts(Domain::Wiki2s, opts.method == Method::Fwsvd);
+            let (m, _) = pipeline::compress_model(&self.engine, &self.weights, &self.data, &copts, opts)
+                .expect("compress");
+            m
+        } else {
+            let (m, _) =
+                drank::compress::methods::compress(&self.weights, stats, opts).expect("compress");
+            m
+        }
+    }
+
+    /// PPL of a compressed model on a domain's test stream.
+    pub fn ppl(&self, model: &drank::model::lowrank::CompressedModel, domain: Domain) -> f64 {
+        eval::ppl_compressed(&self.engine, model, &self.data.domain(domain).test, eval_batches())
+            .expect("ppl")
+    }
+
+    pub fn ppl_dense(&self, weights: &Weights, domain: Domain) -> f64 {
+        eval::ppl_dense(&self.engine, weights, &self.data.domain(domain).test, eval_batches())
+            .expect("ppl")
+    }
+
+    /// Zero-shot accuracies + average for (reconstructed) dense weights.
+    pub fn zero_shot(&self, weights: &Weights) -> (Vec<(drank::data::tasks::Suite, f64)>, f64) {
+        eval::tasks::run_all_suites(
+            &self.engine,
+            weights,
+            &self.data.tokenizer,
+            &self.data.lexicon,
+            task_items(),
+            17,
+        )
+        .expect("zero-shot")
+    }
+}
+
+/// Print + persist a finished table.
+pub fn emit(table: &Table, name: &str) {
+    print!("{}", table.markdown());
+    table.save_json(name).expect("save report");
+    eprintln!("[bench] wrote runs/reports/{name}.json");
+}
+
+/// The standard method lineup in paper order.
+pub fn all_methods() -> Vec<Method> {
+    vec![
+        Method::PlainSvd,
+        Method::Fwsvd,
+        Method::Asvd,
+        Method::SvdLlm,
+        Method::BasisSharing,
+        Method::DRank,
+    ]
+}
+
+/// Default compression options for a method at (ratio, n).
+pub fn opts(method: Method, ratio: f64, n: usize) -> CompressOpts {
+    CompressOpts { method, ratio, group_layers: n, ..Default::default() }
+}

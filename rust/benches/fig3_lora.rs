@@ -1,0 +1,50 @@
+//! Figure 3: LoRA fine-tuning PPL of the compressed model, ratios 20–50%,
+//! for SVD-LLM / Basis Sharing / D-Rank.
+//!
+//! Expected shape: LoRA recovers part of the compression loss for every
+//! method; D-Rank stays lowest and the gap widens with the ratio.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::data::synlang::Domain;
+use drank::lora::{finetune, LoraOpts};
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("m");
+    let stats = b.calibrate(Domain::Wiki2s, false);
+    let ratios: Vec<f64> = if common::fast() { vec![0.2, 0.4] } else { vec![0.2, 0.3, 0.4, 0.5] };
+    let steps = common::env_usize("DRANK_LORA_STEPS", 25);
+
+    let mut header = vec!["Method".to_string()];
+    for &r in &ratios {
+        header.push(format!("{:.0}%", r * 100.0));
+        header.push(format!("{:.0}%+LoRA", r * 100.0));
+    }
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Figure 3: LoRA fine-tuning PPL (m, wiki2s)", &hrefs);
+
+    for method in [Method::SvdLlm, Method::BasisSharing, Method::DRank] {
+        let mut cells = vec![method.name().to_string()];
+        for &ratio in &ratios {
+            let model = b.compress(&stats, &common::opts(method, ratio, 2));
+            let before = b.ppl(&model, Domain::Wiki2s);
+            let log = finetune(
+                &b.engine,
+                &model,
+                &b.data,
+                &LoraOpts { steps, ..Default::default() },
+            )
+            .expect("lora finetune");
+            let after = b.ppl_dense(&log.merged, Domain::Wiki2s);
+            cells.push(fmt_ppl(before));
+            cells.push(fmt_ppl(after));
+            eprint!(".");
+        }
+        t.row(cells);
+        eprintln!(" {} done", method.name());
+    }
+    common::emit(&t, "fig3_lora");
+}

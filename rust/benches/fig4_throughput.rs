@@ -1,0 +1,93 @@
+//! Figure 4: serving throughput (tokens/sec) of the dense model vs
+//! compressed models at ratios 20–50%, through the coordinator over
+//! runtime-compiled factored graphs.
+//!
+//! Expected shape: every compressed model >= dense; throughput increases
+//! with the compression ratio; D-Rank >= Basis Sharing (its allocations
+//! skew rank toward cheap, high-value groups).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::coordinator::{Server, ServerOpts};
+use drank::data::synlang::Domain;
+use drank::model::lowrank::CompressedModel;
+use drank::report::Table;
+use drank::util::rng::Rng;
+
+fn serve(model: CompressedModel, stream: &[u32], requests: usize) -> drank::coordinator::Metrics {
+    let cfg = model.config();
+    // serve with a larger batch than the eval artifacts use: the factored
+    // matmuls only beat dense when the GEMMs are compute-bound, which at
+    // tinylm widths needs more rows (paper-scale models are always there)
+    let batch = common::env_usize("DRANK_SERVE_BATCH", 32);
+    let server = Server::spawn(
+        move || {
+            let rt = drank::runtime::Runtime::cpu()?;
+            drank::graph::compile_forward(&rt, &model, batch, cfg.seq)
+        },
+        ServerOpts::default(),
+    );
+    let clients = 8;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let stream = stream.to_vec();
+        let seq = cfg.seq;
+        let per = requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            for _ in 0..per {
+                let start = rng.below(stream.len() - seq);
+                client.score(stream[start..start + seq].to_vec()).expect("score");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown().expect("shutdown")
+}
+
+fn main() {
+    let b = common::setup(&std::env::var("DRANK_SERVE_MODEL").unwrap_or_else(|_| "l".into()));
+    let stats = b.calibrate(Domain::Wiki2s, false);
+    let stream = b.data.domain(Domain::Wiki2s).test.clone();
+    let requests = common::env_usize("DRANK_SERVE_REQUESTS", 160);
+    let ratios: Vec<f64> = if common::fast() { vec![0.2, 0.5] } else { vec![0.2, 0.3, 0.4, 0.5] };
+
+    let mut t = Table::new(
+        &format!("Figure 4: serving throughput ({})", b.weights.config.name),
+        &["Model", "tokens/s", "p50 ms", "p99 ms", "speedup vs dense"],
+    );
+
+    let dense = CompressedModel::dense_passthrough(b.weights.clone());
+    let m0 = serve(dense, &stream, requests);
+    let base = m0.throughput_tps();
+    t.row(vec![
+        "Dense".into(),
+        format!("{:.0}", base),
+        format!("{:.1}", m0.p50_ms()),
+        format!("{:.1}", m0.p99_ms()),
+        "1.00".into(),
+    ]);
+    eprintln!("dense: {base:.0} tok/s");
+
+    for method in [Method::SvdLlm, Method::BasisSharing, Method::DRank] {
+        for &ratio in &ratios {
+            let model = b.compress(&stats, &common::opts(method, ratio, 2));
+            let m = serve(model, &stream, requests);
+            t.row(vec![
+                format!("{} {:.0}%", method.name(), ratio * 100.0),
+                format!("{:.0}", m.throughput_tps()),
+                format!("{:.1}", m.p50_ms()),
+                format!("{:.1}", m.p99_ms()),
+                format!("{:.2}", m.throughput_tps() / base),
+            ]);
+            eprint!(".");
+        }
+        eprintln!(" {} done", method.name());
+    }
+    common::emit(&t, "fig4_throughput");
+}

@@ -1,0 +1,129 @@
+//! §Perf microbenches: timings of every hot path on the compression and
+//! serving sides. Used for the EXPERIMENTS.md §Perf before/after log.
+//!
+//! Own harness (criterion is unavailable offline): median of N timed
+//! repetitions after a warmup, reported in a table.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::whiten::Whitener;
+use drank::linalg::svd::svd;
+use drank::linalg::{cholesky_jitter, effective_rank};
+use drank::report::Table;
+use drank::tensor::matmul::{matmul_f32, matmul_f64};
+use drank::tensor::{Mat32, MatF};
+use drank::util::rng::Rng;
+use drank::util::Timer;
+
+fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        times.push(t.millis());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+fn randf(rng: &mut Rng, r: usize, c: usize) -> MatF {
+    MatF::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut t = Table::new("perf: hot paths", &["op", "size", "median ms", "notes"]);
+
+    // f64 GEMM (whitening path)
+    for &n in &[192usize, 512] {
+        let a = randf(&mut rng, n, n);
+        let b = randf(&mut rng, n, n);
+        let ms = median_time(|| { let _ = matmul_f64(&a, &b); }, 5);
+        let gflops = 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
+        t.row(vec![
+            "matmul_f64".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{ms:.2}"),
+            format!("{gflops:.2} GFLOP/s"),
+        ]);
+    }
+    // f32 GEMM (reconstruction path)
+    {
+        let n = 512;
+        let a32 = Mat32::from_vec(n, n, (0..n * n).map(|i| (i % 13) as f32).collect());
+        let b32 = a32.clone();
+        let ms = median_time(|| { let _ = matmul_f32(&a32, &b32); }, 5);
+        let gflops = 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
+        t.row(vec![
+            "matmul_f32".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{ms:.2}"),
+            format!("{gflops:.2} GFLOP/s"),
+        ]);
+    }
+    // SVD via Gram eigen — the compression bottleneck
+    for &(m, n) in &[(192usize, 384usize), (192, 768), (512, 192)] {
+        let a = randf(&mut rng, m, n);
+        let ms = median_time(|| { let _ = svd(&a); }, 3);
+        t.row(vec!["svd".into(), format!("{m}x{n}"), format!("{ms:.2}"), "jacobi-gram".into()]);
+    }
+    // Cholesky + triangular solve (whitening)
+    {
+        let n = 512;
+        let x = randf(&mut rng, n + 32, n);
+        let mut g = x.t_matmul(&x);
+        g.scale(1.0 / (n + 32) as f64);
+        let ms = median_time(|| { let _ = cholesky_jitter(&g); }, 5);
+        t.row(vec!["cholesky".into(), format!("{n}x{n}"), format!("{ms:.2}"), "".into()]);
+        let wh = Whitener::from_gram(&g);
+        let w = randf(&mut rng, n, 192);
+        let ms = median_time(|| { let _ = wh.unapply(&wh.apply(&w)); }, 5);
+        t.row(vec!["whiten+unwhiten".into(), format!("{n}x192"), format!("{ms:.2}"), "".into()]);
+    }
+    // effective rank
+    {
+        let s: Vec<f64> = (0..512).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let ms = median_time(|| { let _ = effective_rank(&s); }, 50);
+        t.row(vec!["effective_rank".into(), "512".into(), format!("{ms:.4}"), "".into()]);
+    }
+
+    // end-to-end: compress (drank) + one PPL batch + graph compile+exec,
+    // only if a checkpoint exists (perf bench also runs standalone pre-train)
+    if std::path::Path::new("runs/m/model.bin").exists() {
+        let b = common::setup("m");
+        let stats = b.calibrate(drank::data::synlang::Domain::Wiki2s, false);
+        let opts = common::opts(drank::compress::Method::DRank, 0.3, 2);
+        let ms = median_time(
+            || { let _ = drank::compress::methods::compress(&b.weights, &stats, &opts); },
+            3,
+        );
+        t.row(vec!["compress(drank,m)".into(), "ratio 0.3 n=2".into(), format!("{ms:.1}"), "full model".into()]);
+
+        let (model, _) = drank::compress::methods::compress(&b.weights, &stats, &opts).unwrap();
+        let cfg = model.config();
+        let tcomp = Timer::start();
+        let fwd = drank::graph::compile_forward(&b.engine.rt, &model, cfg.batch, cfg.seq).unwrap();
+        let compile_ms = tcomp.millis();
+        let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let ms = median_time(|| { let _ = fwd.nll(&toks).unwrap(); }, 10);
+        let tokens = (cfg.batch * cfg.seq) as f64;
+        t.row(vec![
+            "graph compile".into(),
+            "drank 0.3".into(),
+            format!("{compile_ms:.1}"),
+            "once per allocation".into(),
+        ]);
+        t.row(vec![
+            "graph exec".into(),
+            format!("{}x{}", cfg.batch, cfg.seq),
+            format!("{ms:.2}"),
+            format!("{:.0} tok/s", tokens / (ms / 1e3)),
+        ]);
+    } else {
+        eprintln!("[perf] no m checkpoint; skipping end-to-end rows");
+    }
+
+    common::emit(&t, "perf_hotpath");
+}

@@ -1,0 +1,47 @@
+//! Table 2: PPL of the GQA model (LLaMA-3-8B analog) vs grouped layers n,
+//! at 20% and 30% compression — SVD-LLM is n=1, Basis Sharing n=2..5.
+//!
+//! Expected shape: grouping n>1 *hurts* on GQA models (slimmed W_K/W_V
+//! concatenations inflate group rank — paper §3.4).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::data::synlang::Domain;
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("gqa");
+    let stats = b.calibrate(Domain::Wiki2s, false);
+
+    let mut t = Table::new(
+        "Table 2: GQA model PPL vs grouped layers (wiki2s)",
+        &["Method", "Grouped layers", "20%", "30%"],
+    );
+    let mut eval_cfg = |method: Method, n: usize| -> Vec<String> {
+        let mut cells = vec![method.name().to_string(), n.to_string()];
+        for ratio in [0.2, 0.3] {
+            let mut o = common::opts(method, ratio, n);
+            o.gqa_policy = false; // show the raw effect of grouping
+            let model = b.compress(&stats, &o);
+            cells.push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+            eprint!(".");
+        }
+        cells
+    };
+    t.row(eval_cfg(Method::SvdLlm, 1));
+    let ns: Vec<usize> = if common::fast() { vec![2, 4] } else { vec![2, 3, 4, 5] };
+    for n in ns {
+        t.row(eval_cfg(Method::BasisSharing, n));
+    }
+    // and the paper's remedy: D-Rank with the n=1 GQA policy
+    let mut cells = vec!["D-Rank (n=1 policy)".to_string(), "1".to_string()];
+    for ratio in [0.2, 0.3] {
+        let model = b.compress(&stats, &common::opts(Method::DRank, ratio, 4));
+        cells.push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+    }
+    t.row(cells);
+    eprintln!();
+    common::emit(&t, "table2_gqa_grouping");
+}

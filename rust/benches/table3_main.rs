@@ -1,0 +1,55 @@
+//! Table 3: the main grid — PPL on three datasets + 7 zero-shot suites,
+//! six methods × ratios 20–50%, n=2 groups, wiki2s calibration.
+//!
+//! Expected shape: D-Rank <= Basis Sharing <= SVD-LLM <= ASVD << FWSVD/SVD
+//! in PPL at every ratio, with graceful degradation as ratio grows.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::data::synlang::Domain;
+use drank::data::tasks::ALL_SUITES;
+use drank::report::{fmt_acc, fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("m");
+    // one calibration pass serves every method; FWSVD additionally needs
+    // Fisher rows, so collect them in the same pass
+    let stats = b.calibrate(Domain::Wiki2s, true);
+
+    let mut header = vec!["Ratio", "Method", "wiki2s↓", "ptbs↓", "c4s↓"];
+    header.extend(ALL_SUITES.iter().map(|s| s.name()));
+    header.push("Average*↑");
+    let mut t = Table::new("Table 3: PPL + zero-shot, methods x ratios (m)", &header);
+
+    // original row
+    {
+        let mut cells = vec!["0%".to_string(), "Original".to_string()];
+        for d in [Domain::Wiki2s, Domain::Ptbs, Domain::C4s] {
+            cells.push(fmt_ppl(b.ppl_dense(&b.weights, d)));
+        }
+        let (accs, avg) = b.zero_shot(&b.weights);
+        cells.extend(accs.iter().map(|(_, a)| fmt_acc(*a)));
+        cells.push(fmt_acc(avg));
+        t.row(cells);
+    }
+
+    let ratios: Vec<f64> = if common::fast() { vec![0.2, 0.4] } else { vec![0.2, 0.3, 0.4, 0.5] };
+    for &ratio in &ratios {
+        for method in common::all_methods() {
+            let model = b.compress(&stats, &common::opts(method, ratio, 2));
+            let dense = model.to_dense();
+            let mut cells = vec![format!("{:.0}%", ratio * 100.0), method.name().to_string()];
+            for d in [Domain::Wiki2s, Domain::Ptbs, Domain::C4s] {
+                cells.push(fmt_ppl(b.ppl_dense(&dense, d)));
+            }
+            let (accs, avg) = b.zero_shot(&dense);
+            cells.extend(accs.iter().map(|(_, a)| fmt_acc(*a)));
+            cells.push(fmt_acc(avg));
+            t.row(cells);
+            eprint!(".");
+        }
+        eprintln!(" ratio {ratio} done");
+    }
+    common::emit(&t, "table3_main");
+}

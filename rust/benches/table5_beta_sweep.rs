@@ -1,0 +1,61 @@
+//! Table 5: β-rebalance sweep — PPL for β ∈ {0.2..0.45} × grouped layers
+//! n ∈ {2,3,4} × ratios 20–50%, vs the Basis Sharing baseline row.
+//!
+//! Expected shape: a moderate β (≈0.3–0.4) beats both β=0 and large β,
+//! and every D-Rank cell beats the Basis Sharing cell at the same (n, ratio).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::data::synlang::Domain;
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("m");
+    let stats = b.calibrate(Domain::Wiki2s, false);
+
+    let ratios: Vec<f64> = if common::fast() { vec![0.2, 0.4] } else { vec![0.2, 0.3, 0.4, 0.5] };
+    let ns: Vec<usize> = if common::fast() { vec![2] } else { vec![2, 3, 4] };
+    let betas: Vec<f64> = if common::fast() {
+        vec![0.2, 0.3, 0.4]
+    } else {
+        vec![0.2, 0.25, 0.3, 0.35, 0.4, 0.45]
+    };
+
+    let mut header = vec!["beta \\ (ratio, n)".to_string()];
+    for &r in &ratios {
+        for &n in &ns {
+            header.push(format!("{:.0}% n={n}", r * 100.0));
+        }
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 5: beta sweep (m, wiki2s)", &header_refs);
+
+    // Basis Sharing baseline row
+    let mut cells = vec!["Basis Sharing".to_string()];
+    for &ratio in &ratios {
+        for &n in &ns {
+            let model = b.compress(&stats, &common::opts(Method::BasisSharing, ratio, n));
+            cells.push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+            eprint!(".");
+        }
+    }
+    t.row(cells);
+
+    for &beta in &betas {
+        let mut cells = vec![format!("{beta}")];
+        for &ratio in &ratios {
+            for &n in &ns {
+                let mut o = common::opts(Method::DRank, ratio, n);
+                o.beta = beta;
+                let model = b.compress(&stats, &o);
+                cells.push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+                eprint!(".");
+            }
+        }
+        t.row(cells);
+        eprintln!(" beta {beta} done");
+    }
+    common::emit(&t, "table5_beta_sweep");
+}

@@ -1,0 +1,39 @@
+//! Table 7: PPL across model scales at 20% compression on wiki2s —
+//! the 7B/13B/30B axis mapped to s / m / l.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::data::synlang::Domain;
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let scales = ["s", "m", "l"];
+    let methods = [Method::SvdLlm, Method::BasisSharing, Method::DRank];
+    let mut rows: Vec<Vec<String>> =
+        methods.iter().map(|m| vec![m.name().to_string()]).collect();
+    let mut orig = vec!["Original".to_string()];
+
+    for name in scales {
+        let b = common::setup(name);
+        let stats = b.calibrate(Domain::Wiki2s, false);
+        orig.push(fmt_ppl(b.ppl_dense(&b.weights, Domain::Wiki2s)));
+        for (mi, method) in methods.into_iter().enumerate() {
+            let model = b.compress(&stats, &common::opts(method, 0.2, 2));
+            rows[mi].push(fmt_ppl(b.ppl(&model, Domain::Wiki2s)));
+            eprint!(".");
+        }
+        eprintln!(" {name} done");
+    }
+
+    let mut t = Table::new(
+        "Table 7: PPL across scales @ 20% (wiki2s)",
+        &["Method", "s (7B-analog)", "m (13B-analog)", "l (30B-analog)"],
+    );
+    t.row(orig);
+    for r in rows {
+        t.row(r);
+    }
+    common::emit(&t, "table7_scales");
+}

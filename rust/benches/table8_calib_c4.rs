@@ -1,0 +1,46 @@
+//! Table 8: calibration-transfer — calibrate on C4 (c4s), evaluate PPL on
+//! both C4 and WikiText-2, grouped layers n ∈ {2..5}, at 20% compression.
+//!
+//! Expected shape: D-Rank < Basis Sharing < SVD-LLM on both the calibration
+//! domain and the out-of-distribution domain.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use drank::compress::Method;
+use drank::data::synlang::Domain;
+use drank::report::{fmt_ppl, Table};
+
+fn main() {
+    let b = common::setup("m");
+    let stats = b.calibrate(Domain::C4s, false);
+
+    let mut t = Table::new(
+        "Table 8: calibration on c4s @ 20%",
+        &["Method", "Grouped layers", "c4s PPL", "wiki2s PPL"],
+    );
+    {
+        let model = b.compress(&stats, &common::opts(Method::SvdLlm, 0.2, 1));
+        t.row(vec![
+            "SVD-LLM".into(),
+            "-".into(),
+            fmt_ppl(b.ppl(&model, Domain::C4s)),
+            fmt_ppl(b.ppl(&model, Domain::Wiki2s)),
+        ]);
+    }
+    let ns: Vec<usize> = if common::fast() { vec![2, 4] } else { vec![2, 3, 4, 5] };
+    for method in [Method::BasisSharing, Method::DRank] {
+        for &n in &ns {
+            let model = b.compress(&stats, &common::opts(method, 0.2, n));
+            t.row(vec![
+                method.name().into(),
+                n.to_string(),
+                fmt_ppl(b.ppl(&model, Domain::C4s)),
+                fmt_ppl(b.ppl(&model, Domain::Wiki2s)),
+            ]);
+            eprint!(".");
+        }
+    }
+    eprintln!();
+    common::emit(&t, "table8_calib_c4");
+}

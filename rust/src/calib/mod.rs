@@ -1,0 +1,198 @@
+//! Calibration: per-projection input statistics over calibration batches.
+//!
+//! Streams [batch, seq] token windows through the AOT `calib` artifact
+//! (whose Gram products run in the Pallas `gram_accum` kernel) and
+//! re-accumulates in f64 — the paper keeps the whitening matrix S in FP64.
+//! Also collects |x| means (ASVD scaling) and, via the `fisher` artifact,
+//! row-aggregated squared gradients (FWSVD weighting).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::synlang::Domain;
+use crate::data::{Batcher, DataBundle};
+use crate::model::{Weights, COMPRESSIBLE};
+use crate::runtime::engine::{tensor_of, Engine};
+use crate::runtime::lit_i32;
+use crate::tensor::MatF;
+
+/// Where each compressible type reads its input statistics from.
+pub fn gram_slot(typ: &str) -> usize {
+    match typ {
+        "wq" | "wk" | "wv" => 0, // g_attn
+        "wo" => 1,               // g_o
+        "w_gate" | "w_up" => 2,  // g_mlp
+        "w_down" => 3,           // g_down
+        _ => panic!("not compressible: {typ}"),
+    }
+}
+
+/// Accumulated calibration statistics for one model.
+pub struct CalibStats {
+    /// grams[slot][layer]: mean X^T X (f64), slot as in `gram_slot`
+    pub grams: Vec<Vec<MatF>>,
+    /// absmean[slot][layer][dim]: mean |x_dim|
+    pub absmean: Vec<Vec<Vec<f64>>>,
+    /// fisher[type][layer][row]: sum of grad^2 over the output axis
+    pub fisher: BTreeMap<String, Vec<Vec<f64>>>,
+    /// tokens accumulated
+    pub tokens: usize,
+}
+
+/// Options for a calibration run.
+pub struct CalibOpts {
+    pub domain: Domain,
+    pub batches: usize,
+    pub seed: u64,
+    /// also run the fisher artifact (needed by FWSVD only)
+    pub fisher: bool,
+}
+
+impl Default for CalibOpts {
+    fn default() -> Self {
+        Self { domain: Domain::Wiki2s, batches: 16, seed: 13, fisher: false }
+    }
+}
+
+/// Run calibration for `weights` on the chosen domain stream.
+pub fn run(
+    engine: &Engine,
+    weights: &Weights,
+    data: &DataBundle,
+    opts: &CalibOpts,
+) -> Result<CalibStats> {
+    let cfg = weights.config;
+    let stream = &data.domain(opts.domain).train;
+    let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed);
+
+    let slot_dim = [cfg.d, cfg.d, cfg.d, cfg.dff];
+    let mut grams: Vec<Vec<MatF>> = slot_dim
+        .iter()
+        .map(|&d| (0..cfg.layers).map(|_| MatF::zeros(d, d)).collect())
+        .collect();
+    let mut absmean: Vec<Vec<Vec<f64>>> = slot_dim
+        .iter()
+        .map(|&d| vec![vec![0.0; d]; cfg.layers])
+        .collect();
+    let mut fisher: BTreeMap<String, Vec<Vec<f64>>> = BTreeMap::new();
+    if opts.fisher {
+        for t in COMPRESSIBLE {
+            let (d1, _) = cfg.matrix_dims(t);
+            fisher.insert(t.to_string(), vec![vec![0.0; d1]; cfg.layers]);
+        }
+    }
+
+    let mut tokens = 0usize;
+    for _ in 0..opts.batches {
+        let batch = batcher.next_batch();
+        // Literal lacks Clone in the crate's public API, so rebuild the
+        // weight literals per batch (cheap relative to the forward pass).
+        let mut inputs = engine.weight_literals(weights)?;
+        inputs.push(lit_i32(&batch, &[cfg.batch, cfg.seq])?);
+        let outs = engine.exec(cfg.name, "calib", &inputs)?;
+        // outputs: g_attn, g_o, g_mlp, g_down, a_attn, a_o, a_mlp, a_down
+        for slot in 0..4 {
+            let (gdata, gshape) = tensor_of(&outs[slot])?;
+            let d = gshape[1];
+            for l in 0..cfg.layers {
+                let off = l * d * d;
+                let g = &mut grams[slot][l];
+                for i in 0..d * d {
+                    g.data[i] += gdata[off + i] as f64;
+                }
+            }
+            let (adata, _) = tensor_of(&outs[4 + slot])?;
+            for l in 0..cfg.layers {
+                for i in 0..d {
+                    absmean[slot][l][i] += adata[l * d + i] as f64;
+                }
+            }
+        }
+        if opts.fisher {
+            let mut finputs = engine.weight_literals(weights)?;
+            finputs.push(lit_i32(&batch, &[cfg.batch, cfg.seq])?);
+            let fouts = engine.exec(cfg.name, "fisher", &finputs)?;
+            for (ti, t) in COMPRESSIBLE.iter().enumerate() {
+                let (fdata, fshape) = tensor_of(&fouts[ti])?;
+                let d1 = fshape[1];
+                let rows = fisher.get_mut(*t).unwrap();
+                for l in 0..cfg.layers {
+                    for i in 0..d1 {
+                        rows[l][i] += fdata[l * d1 + i] as f64;
+                    }
+                }
+            }
+        }
+        tokens += cfg.batch * cfg.seq;
+    }
+
+    // normalize to per-token means (grams stay as means of x xᵀ)
+    let scale = 1.0 / tokens.max(1) as f64;
+    for slot in 0..4 {
+        for l in 0..cfg.layers {
+            grams[slot][l].scale(scale);
+            for v in &mut absmean[slot][l] {
+                *v *= scale;
+            }
+        }
+    }
+    Ok(CalibStats { grams, absmean, fisher, tokens })
+}
+
+impl CalibStats {
+    /// Synthetic statistics for unit tests / offline experiments: random
+    /// anisotropic PSD grams, positive absmeans, uniform fisher rows.
+    pub fn synthetic(cfg: &crate::model::ModelConfig, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let slot_dim = [cfg.d, cfg.d, cfg.d, cfg.dff];
+        let mut grams = Vec::new();
+        let mut absmean = Vec::new();
+        for &d in &slot_dim {
+            let mut per_layer = Vec::new();
+            let mut per_layer_abs = Vec::new();
+            for _ in 0..cfg.layers {
+                // anisotropic: X rows scaled by 1/(1+j)
+                let samples = d + 8;
+                let mut x = MatF::zeros(samples, d);
+                for r in 0..samples {
+                    for c in 0..d {
+                        *x.at_mut(r, c) = rng.normal() / (1.0 + c as f64 * 0.05);
+                    }
+                }
+                let mut g = x.t_matmul(&x);
+                g.scale(1.0 / samples as f64);
+                per_layer.push(g);
+                per_layer_abs.push((0..d).map(|c| 0.8 / (1.0 + c as f64 * 0.05)).collect());
+            }
+            grams.push(per_layer);
+            absmean.push(per_layer_abs);
+        }
+        let mut fisher = BTreeMap::new();
+        for t in COMPRESSIBLE {
+            let (d1, _) = cfg.matrix_dims(t);
+            fisher.insert(
+                t.to_string(),
+                (0..cfg.layers)
+                    .map(|_| (0..d1).map(|_| rng.uniform() + 0.1).collect())
+                    .collect(),
+            );
+        }
+        Self { grams, absmean, fisher, tokens: 1024 }
+    }
+
+    /// Mean input Gram for (type, layer).
+    pub fn gram(&self, typ: &str, layer: usize) -> &MatF {
+        &self.grams[gram_slot(typ)][layer]
+    }
+
+    /// Mean |x| per input dim for (type, layer).
+    pub fn absmean(&self, typ: &str, layer: usize) -> &[f64] {
+        &self.absmean[gram_slot(typ)][layer]
+    }
+
+    /// Fisher rows for (type, layer), if collected.
+    pub fn fisher_rows(&self, typ: &str, layer: usize) -> Option<&[f64]> {
+        self.fisher.get(typ).map(|v| v[layer].as_slice())
+    }
+}

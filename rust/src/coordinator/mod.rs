@@ -1,0 +1,218 @@
+//! Serving coordinator: request router + dynamic batcher over a compiled
+//! forward graph (the L3 runtime the paper's throughput numbers come from).
+//!
+//! Architecture (std threads + channels; tokio is unavailable offline):
+//!
+//! ```text
+//!   clients ──score()──▶ bounded channel (backpressure)
+//!                           │
+//!                    batcher/worker thread
+//!                    (owns the PJRT objects, which are !Send:
+//!                     builds the graph, drains up to `batch`
+//!                     requests per window, pads, executes)
+//!                           │
+//!   clients ◀──Response── per-request reply channels
+//! ```
+//!
+//! Scoring requests return per-token NLL (the serving primitive behind
+//! PPL evaluation, option scoring, and reranking workloads).
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::CompiledForward;
+use crate::util::percentile;
+
+/// A scoring request: token ids (<= model seq len).
+pub struct Request {
+    pub tokens: Vec<u32>,
+    pub reply: Sender<Response>,
+    pub enqueued: Instant,
+}
+
+/// Per-request response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// per-token NLL over the request's own tokens (len = tokens-1)
+    pub nll: Vec<f32>,
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving metrics.
+#[derive(Default, Clone, Debug)]
+pub struct Metrics {
+    pub requests: usize,
+    pub tokens: usize,
+    pub batches: usize,
+    pub latencies_ms: Vec<f64>,
+    pub busy_secs: f64,
+    pub wall_secs: f64,
+}
+
+impl Metrics {
+    pub fn throughput_tps(&self) -> f64 {
+        self.tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 99.0)
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.requests as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Coordinator configuration.
+pub struct ServerOpts {
+    /// request queue bound (backpressure: senders block when full)
+    pub queue: usize,
+    /// how long the batcher waits to fill a batch before dispatching
+    pub batch_window: Duration,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        Self { queue: 256, batch_window: Duration::from_millis(2) }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+}
+
+impl Client {
+    /// Blocking score call.
+    pub fn score(&self, tokens: Vec<u32>) -> Result<Response> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Request { tokens, reply: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+}
+
+/// A running scoring server.
+pub struct Server {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<Result<()>>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Server {
+    /// Spawn the worker. `make_forward` runs *inside* the worker thread
+    /// because PJRT handles are not Send (same pattern as a GPU worker
+    /// owning its CUDA context).
+    pub fn spawn<F>(make_forward: F, opts: ServerOpts) -> Self
+    where
+        F: FnOnce() -> Result<CompiledForward> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(opts.queue);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || worker_loop(make_forward, rx, opts, m2));
+        Self { tx: Some(tx), worker: Some(worker), metrics }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.as_ref().expect("server running").clone() }
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) -> Result<Metrics> {
+        drop(self.tx.take()); // closes the channel; worker drains + exits
+        let res = self.worker.take().unwrap().join().expect("worker panicked");
+        res?;
+        let m = self.metrics.lock().unwrap().clone();
+        Ok(m)
+    }
+}
+
+fn worker_loop(
+    make_forward: impl FnOnce() -> Result<CompiledForward>,
+    rx: Receiver<Request>,
+    opts: ServerOpts,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let fwd = make_forward()?;
+    let (bsz, seq) = (fwd.batch, fwd.seq);
+    let wall = Instant::now();
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all clients gone
+        };
+        let mut batch = vec![first];
+        // fill the rest of the batch within the window
+        let deadline = Instant::now() + opts.batch_window;
+        while batch.len() < bsz {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // pad + execute
+        let mut tokens = vec![0i32; bsz * seq];
+        for (row, req) in batch.iter().enumerate() {
+            for (i, &t) in req.tokens.iter().take(seq).enumerate() {
+                tokens[row * seq + i] = t as i32;
+            }
+        }
+        let busy = Instant::now();
+        let nll = fwd.nll(&tokens)?;
+        let busy_secs = busy.elapsed().as_secs_f64();
+
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.busy_secs += busy_secs;
+        for (row, req) in batch.into_iter().enumerate() {
+            let n = req.tokens.len().min(seq);
+            let row_nll = nll[row * (seq - 1)..row * (seq - 1) + n.saturating_sub(1)].to_vec();
+            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            m.requests += 1;
+            m.tokens += n;
+            m.latencies_ms.push(latency_ms);
+            let _ = req.reply.send(Response { nll: row_nll, latency_ms });
+        }
+        m.wall_secs = wall.elapsed().as_secs_f64();
+    }
+    let mut m = metrics.lock().unwrap();
+    m.wall_secs = wall.elapsed().as_secs_f64();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_math() {
+        let m = Metrics {
+            requests: 10,
+            tokens: 960,
+            batches: 4,
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            busy_secs: 0.5,
+            wall_secs: 2.0,
+        };
+        assert!((m.throughput_tps() - 480.0).abs() < 1e-9);
+        assert_eq!(m.mean_batch_occupancy(), 2.5);
+        assert!(m.p50_ms() >= 1.0 && m.p99_ms() <= 4.0);
+    }
+}

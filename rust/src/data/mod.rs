@@ -1,0 +1,219 @@
+//! Data pipeline: corpora, tokenization, splits, and batch iterators.
+//!
+//! A `DataBundle` owns the three domain corpora (train/val/test token
+//! streams through a shared BPE tokenizer) plus the lexicon behind the
+//! zero-shot suites. Everything is deterministic in (seed, vocab size).
+
+pub mod synlang;
+pub mod tasks;
+
+use synlang::{Domain, Generator, Lexicon};
+
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Token streams for one domain.
+pub struct DomainData {
+    pub domain: Domain,
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+/// The full data substrate.
+pub struct DataBundle {
+    pub lexicon: Lexicon,
+    pub tokenizer: Tokenizer,
+    pub domains: Vec<DomainData>,
+}
+
+impl DataBundle {
+    /// Build corpora for all three domains, train the tokenizer on the
+    /// wiki2s training text (the paper calibrates on WikiText-2), and
+    /// tokenize everything. `scale` multiplies corpus sizes (1 = default).
+    pub fn build(vocab_size: usize, seed: u64, scale: f64) -> Self {
+        let lexicon = Lexicon::new();
+        let sizes = |d: Domain| match d {
+            Domain::Wiki2s => (1_200_000.0 * scale, 60_000.0 * scale),
+            Domain::Ptbs => (300_000.0 * scale, 50_000.0 * scale),
+            Domain::C4s => (600_000.0 * scale, 60_000.0 * scale),
+        };
+        let mut texts = Vec::new();
+        for (i, d) in [Domain::Wiki2s, Domain::Ptbs, Domain::C4s].iter().enumerate() {
+            let (train_sz, eval_sz) = sizes(*d);
+            let mut g = Generator::new(&lexicon, *d, seed.wrapping_add(i as u64 * 77));
+            let train = g.corpus(train_sz as usize);
+            let val = g.corpus(eval_sz as usize);
+            let test = g.corpus(eval_sz as usize);
+            texts.push((*d, train, val, test));
+        }
+        let tokenizer = Tokenizer::train(&texts[0].1, vocab_size);
+        let domains = texts
+            .into_iter()
+            .map(|(domain, train, val, test)| DomainData {
+                domain,
+                train: tokenizer.encode(&train),
+                val: tokenizer.encode(&val),
+                test: tokenizer.encode(&test),
+            })
+            .collect();
+        Self { lexicon, tokenizer, domains }
+    }
+
+    pub fn domain(&self, d: Domain) -> &DomainData {
+        self.domains.iter().find(|x| x.domain == d).unwrap()
+    }
+
+    /// Build with a disk cache under `runs/cache` (corpus generation + BPE
+    /// training are deterministic in the key, so cached results are exact).
+    pub fn build_cached(vocab_size: usize, seed: u64, scale: f64) -> Self {
+        let dir = format!("runs/cache/v{vocab_size}_s{seed}_x{}", (scale * 1000.0) as u64);
+        let tok_path = format!("{dir}/tokenizer.json");
+        if std::path::Path::new(&tok_path).exists() {
+            if let Some(b) = Self::load_cache(&dir) {
+                return b;
+            }
+        }
+        let bundle = Self::build(vocab_size, seed, scale);
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = bundle.tokenizer.save(&tok_path);
+        for d in &bundle.domains {
+            for (split, stream) in
+                [("train", &d.train), ("val", &d.val), ("test", &d.test)]
+            {
+                let bytes: Vec<u8> =
+                    stream.iter().flat_map(|&t| t.to_le_bytes()).collect();
+                let _ = std::fs::write(
+                    format!("{dir}/{}_{split}.bin", d.domain.name()),
+                    bytes,
+                );
+            }
+        }
+        bundle
+    }
+
+    fn load_cache(dir: &str) -> Option<Self> {
+        let tokenizer = Tokenizer::load(&format!("{dir}/tokenizer.json")).ok()?;
+        let read = |name: &str| -> Option<Vec<u32>> {
+            let raw = std::fs::read(format!("{dir}/{name}.bin")).ok()?;
+            Some(
+                raw.chunks_exact(4)
+                    .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            )
+        };
+        let mut domains = Vec::new();
+        for d in [Domain::Wiki2s, Domain::Ptbs, Domain::C4s] {
+            domains.push(DomainData {
+                domain: d,
+                train: read(&format!("{}_train", d.name()))?,
+                val: read(&format!("{}_val", d.name()))?,
+                test: read(&format!("{}_test", d.name()))?,
+            });
+        }
+        Some(Self { lexicon: Lexicon::new(), tokenizer, domains })
+    }
+}
+
+/// Deterministic [batch, seq] sampler over a token stream.
+pub struct Batcher<'a> {
+    stream: &'a [u32],
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(stream: &'a [u32], batch: usize, seq: usize, seed: u64) -> Self {
+        assert!(stream.len() > seq + 1, "stream too short for seq {seq}");
+        Self { stream, batch, seq, rng: Rng::new(seed) }
+    }
+
+    /// Random-offset batch as i32 token ids (XLA input dtype), row-major.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = self.rng.below(self.stream.len() - self.seq);
+            out.extend(self.stream[start..start + self.seq].iter().map(|&t| t as i32));
+        }
+        out
+    }
+
+    /// Sequential coverage batches for PPL eval: non-overlapping windows.
+    pub fn eval_batches(stream: &[u32], batch: usize, seq: usize, max_batches: usize) -> Vec<Vec<i32>> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        'outer: for _ in 0..max_batches {
+            let mut b = Vec::with_capacity(batch * seq);
+            for _ in 0..batch {
+                if pos + seq >= stream.len() {
+                    break 'outer;
+                }
+                b.extend(stream[pos..pos + seq].iter().map(|&t| t as i32));
+                pos += seq;
+            }
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_bundle() -> DataBundle {
+        DataBundle::build(128, 42, 0.02)
+    }
+
+    #[test]
+    fn bundle_builds_all_domains() {
+        let b = small_bundle();
+        assert_eq!(b.domains.len(), 3);
+        for d in &b.domains {
+            assert!(d.train.len() > 500, "{:?} {}", d.domain, d.train.len());
+            assert!(d.val.len() > 100, "{:?} {}", d.domain, d.val.len());
+            assert!(d.test.len() > 100);
+        }
+    }
+
+    #[test]
+    fn token_ids_in_vocab_range() {
+        let b = small_bundle();
+        let v = b.tokenizer.vocab_size() as u32;
+        for d in &b.domains {
+            assert!(d.train.iter().all(|&t| t < v));
+        }
+    }
+
+    #[test]
+    fn batcher_shapes_and_determinism() {
+        let b = small_bundle();
+        let stream = &b.domain(Domain::Wiki2s).train;
+        let mut b1 = Batcher::new(stream, 4, 32, 7);
+        let mut b2 = Batcher::new(stream, 4, 32, 7);
+        let x1 = b1.next_batch();
+        let x2 = b2.next_batch();
+        assert_eq!(x1.len(), 4 * 32);
+        assert_eq!(x1, x2);
+        assert_ne!(b1.next_batch(), x1);
+    }
+
+    #[test]
+    fn eval_batches_are_disjoint_and_cover() {
+        let b = small_bundle();
+        let stream = &b.domain(Domain::Ptbs).val;
+        let batches = Batcher::eval_batches(stream, 2, 16, 8);
+        assert!(!batches.is_empty());
+        // windows are sequential; first token of batch0/row0 is stream[0]
+        assert_eq!(batches[0][0], stream[0] as i32);
+        assert_eq!(batches[0][16], stream[16] as i32);
+    }
+
+    #[test]
+    fn same_seed_same_bundle() {
+        let a = DataBundle::build(96, 9, 0.005);
+        let b = DataBundle::build(96, 9, 0.005);
+        assert_eq!(a.domain(Domain::Wiki2s).train, b.domain(Domain::Wiki2s).train);
+    }
+}

@@ -1,0 +1,351 @@
+//! "synlang" — a synthetic probabilistic language with learnable structure.
+//!
+//! Stands in for WikiText-2 / PTB / C4 (unavailable offline; see DESIGN.md
+//! substitution table). The grammar embeds exactly the regularities the
+//! seven zero-shot suites probe, so a trained LM's accuracy on them degrades
+//! gracefully under compression the way LLaMA's does on lm-eval:
+//!
+//!  - noun-class agreement, local and across a distractor (ARC-e / WinoG.)
+//!  - verb-chain Markov preferences (HellaSwag)
+//!  - verb-tool affinities (PIQA)
+//!  - noun-object facts that must be memorized (OpenbookQA)
+//!  - modular digit arithmetic (MathQA)
+//!
+//! Three domain parameterizations re-create the paper's dataset axes:
+//! `wiki2s` (base), `ptbs` (shorter, peakier), `c4s` (topic-shifted,
+//! noisier) — giving an out-of-distribution axis for Table 8.
+
+use crate::util::rng::Rng;
+
+// Lexicon scale matters: compression hurts LLMs through the *long tail*
+// (rare tokens ride low-energy weight directions that truncation kills).
+// A large zipf-distributed lexicon with hundreds of memorizable facts makes
+// tiny models use enough of their capacity that SVD truncation measurably
+// degrades PPL — see EXPERIMENTS.md §Calibration-of-the-substrate.
+pub const N_NOUNS: usize = 300;
+pub const N_VERBS: usize = 96;
+pub const N_OBJECTS: usize = 160;
+pub const N_TOOLS: usize = 64;
+
+const CONS: [&str; 10] = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r"];
+const VOW: [&str; 5] = ["a", "e", "i", "o", "u"];
+const DIGITS: [&str; 10] = [
+    "zefo", "wuno", "tvo", "tris", "kfor", "fivo", "sixa", "sevi", "okto", "nino",
+];
+
+/// Deterministic two-syllable surface form for a word id within a family.
+fn surface(family: u64, id: usize) -> String {
+    let mut r = Rng::new(0x5EED_0000 + family * 1000 + id as u64);
+    let mut s = String::new();
+    for _ in 0..2 {
+        s.push_str(CONS[r.below(CONS.len())]);
+        s.push_str(VOW[r.below(VOW.len())]);
+    }
+    s
+}
+
+/// A family of surfaces with collisions resolved (50^2 two-syllable forms
+/// cannot fit 300 nouns collision-free; extend colliding words by an extra
+/// deterministic syllable until unique).
+fn family(tag: u64, n: usize) -> Vec<String> {
+    let mut seen = std::collections::BTreeSet::new();
+    (0..n)
+        .map(|i| {
+            let mut s = surface(tag, i);
+            let mut salt = 0u64;
+            while !seen.insert(s.clone()) {
+                let mut r = Rng::new(0xD15A_0000 + tag * 7919 + i as u64 * 31 + salt);
+                s.push_str(CONS[r.below(CONS.len())]);
+                s.push_str(VOW[r.below(VOW.len())]);
+                salt += 1;
+            }
+            s
+        })
+        .collect()
+}
+
+/// The fixed lexicon + relational structure shared by every domain.
+pub struct Lexicon {
+    pub nouns: Vec<String>,
+    pub noun_class: Vec<usize>, // 0 or 1; controls verb agreement suffix
+    pub verbs: Vec<String>,     // stem; agreement adds "ra"(0) / "ti"(1)
+    pub objects: Vec<String>,
+    pub tools: Vec<String>,
+    pub likes: Vec<usize>,      // noun -> object (facts)
+    pub verb_tool: Vec<usize>,  // verb -> tool (affinities)
+    pub verb_next: Vec<usize>,  // verb -> preferred successor verb (chains)
+}
+
+impl Lexicon {
+    pub fn new() -> Self {
+        let mut r = Rng::new(0xC0FFEE);
+        let nouns = family(1, N_NOUNS);
+        let verbs = family(2, N_VERBS);
+        let objects = family(3, N_OBJECTS);
+        let tools = family(4, N_TOOLS);
+        Self {
+            noun_class: (0..N_NOUNS).map(|_| r.below(2)).collect(),
+            likes: (0..N_NOUNS).map(|_| r.below(N_OBJECTS)).collect(),
+            verb_tool: (0..N_VERBS).map(|_| r.below(N_TOOLS)).collect(),
+            verb_next: (0..N_VERBS).map(|_| r.below(N_VERBS)).collect(),
+            nouns,
+            verbs,
+            objects,
+            tools,
+        }
+    }
+
+    /// Agreement-inflected verb form for a noun class.
+    pub fn verb_form(&self, verb: usize, class: usize) -> String {
+        format!("{}{}", self.verbs[verb], if class == 0 { "ra" } else { "ti" })
+    }
+
+    pub fn digit(&self, d: usize) -> &'static str {
+        DIGITS[d % 10]
+    }
+}
+
+impl Default for Lexicon {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Domain parameterization (the WikiText-2 / PTB / C4 analogs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    Wiki2s,
+    Ptbs,
+    C4s,
+}
+
+impl Domain {
+    pub fn parse(s: &str) -> Option<Domain> {
+        match s {
+            "wiki2s" | "wikitext2" => Some(Domain::Wiki2s),
+            "ptbs" | "ptb" => Some(Domain::Ptbs),
+            "c4s" | "c4" => Some(Domain::C4s),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Domain::Wiki2s => "wiki2s",
+            Domain::Ptbs => "ptbs",
+            Domain::C4s => "c4s",
+        }
+    }
+
+    /// (template weights [svo, agree, fact, chain, math, tool],
+    ///  zipf exponent, noun offset, noise prob)
+    fn params(self) -> ([f64; 6], f64, usize, f64) {
+        match self {
+            Domain::Wiki2s => ([4.0, 2.0, 2.0, 2.0, 1.0, 1.5], 1.0, 0, 0.00),
+            Domain::Ptbs => ([5.0, 1.5, 1.5, 1.0, 0.5, 1.0], 1.4, 0, 0.00),
+            // topic shift: nouns drawn from the upper half of the lexicon,
+            // flatter distribution, occasional random-word noise
+            Domain::C4s => ([3.0, 2.0, 2.0, 3.0, 1.5, 2.0], 0.6, N_NOUNS / 2, 0.03),
+        }
+    }
+}
+
+/// Sentence generator for one domain.
+pub struct Generator<'a> {
+    pub lex: &'a Lexicon,
+    pub domain: Domain,
+    rng: Rng,
+    zipf: Vec<f64>,
+}
+
+impl<'a> Generator<'a> {
+    pub fn new(lex: &'a Lexicon, domain: Domain, seed: u64) -> Self {
+        let (_, zipf_exp, offset, _) = domain.params();
+        // zipf weights over nouns with a domain-specific rotation
+        let zipf = (0..N_NOUNS)
+            .map(|i| 1.0 / ((((i + offset) % N_NOUNS) + 1) as f64).powf(zipf_exp))
+            .collect();
+        Self { lex, domain, rng: Rng::new(seed), zipf }
+    }
+
+    fn noun(&mut self) -> usize {
+        let w = self.zipf.clone();
+        self.rng.categorical(&w)
+    }
+
+    /// One sentence of the domain's mixture.
+    pub fn sentence(&mut self) -> String {
+        let (weights, _, _, noise) = self.domain.params();
+        if self.rng.uniform() < noise {
+            // C4-style junk: random word soup
+            let n = 3 + self.rng.below(4);
+            let mut parts = Vec::new();
+            for _ in 0..n {
+                parts.push(surface(9, self.rng.below(50)));
+            }
+            return parts.join(" ");
+        }
+        let lex = self.lex;
+        match self.rng.categorical(&weights) {
+            0 => {
+                // SVO with local agreement
+                let n = self.noun();
+                let v = self.rng.below(N_VERBS);
+                let o = self.rng.below(N_OBJECTS);
+                format!(
+                    "the {} {} the {}",
+                    lex.nouns[n],
+                    lex.verb_form(v, lex.noun_class[n]),
+                    lex.objects[o]
+                )
+            }
+            1 => {
+                // long-range agreement across a distractor of the other class
+                let n = self.noun();
+                let other: Vec<usize> = (0..N_NOUNS)
+                    .filter(|&m| lex.noun_class[m] != lex.noun_class[n])
+                    .collect();
+                let d = other[self.rng.below(other.len())];
+                let v = self.rng.below(N_VERBS);
+                format!(
+                    "the {} near the {} {}",
+                    lex.nouns[n],
+                    lex.nouns[d],
+                    lex.verb_form(v, lex.noun_class[n])
+                )
+            }
+            2 => {
+                // memorizable fact
+                let n = self.noun();
+                format!("the {} likes the {}", lex.nouns[n], lex.objects[lex.likes[n]])
+            }
+            3 => {
+                // verb chain following verb_next with prob .8
+                let mut v = self.rng.below(N_VERBS);
+                let mut parts = vec![format!("then {}", lex.verbs[v])];
+                for _ in 0..2 + self.rng.below(2) {
+                    v = if self.rng.uniform() < 0.8 {
+                        lex.verb_next[v]
+                    } else {
+                        self.rng.below(N_VERBS)
+                    };
+                    parts.push(format!("then {}", lex.verbs[v]));
+                }
+                parts.join(" ")
+            }
+            4 => {
+                // modular arithmetic
+                let a = self.rng.below(10);
+                let b = self.rng.below(10);
+                if self.rng.uniform() < 0.5 {
+                    format!(
+                        "{} plus {} eq {}",
+                        lex.digit(a),
+                        lex.digit(b),
+                        lex.digit((a + b) % 10)
+                    )
+                } else {
+                    format!(
+                        "{} minus {} eq {}",
+                        lex.digit(a),
+                        lex.digit(b),
+                        lex.digit((10 + a - b) % 10)
+                    )
+                }
+            }
+            _ => {
+                // verb-tool affinity
+                let v = self.rng.below(N_VERBS);
+                format!("{} with the {}", lex.verbs[v], lex.tools[lex.verb_tool[v]])
+            }
+        }
+    }
+
+    /// A corpus of roughly `target_chars` characters.
+    pub fn corpus(&mut self, target_chars: usize) -> String {
+        let mut out = String::with_capacity(target_chars + 64);
+        while out.len() < target_chars {
+            if !out.is_empty() {
+                out.push_str(" ; ");
+            }
+            out.push_str(&self.sentence());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_is_deterministic() {
+        let a = Lexicon::new();
+        let b = Lexicon::new();
+        assert_eq!(a.nouns, b.nouns);
+        assert_eq!(a.likes, b.likes);
+    }
+
+    #[test]
+    fn surfaces_are_distinct_within_family() {
+        let lex = Lexicon::new();
+        for fam in [&lex.nouns, &lex.verbs, &lex.objects, &lex.tools] {
+            let seen: std::collections::BTreeSet<_> = fam.iter().collect();
+            assert_eq!(seen.len(), fam.len(), "collision in family");
+        }
+    }
+
+    #[test]
+    fn corpus_reaches_target_and_is_ascii() {
+        let lex = Lexicon::new();
+        let mut g = Generator::new(&lex, Domain::Wiki2s, 1);
+        let c = g.corpus(10_000);
+        assert!(c.len() >= 10_000);
+        assert!(c.is_ascii());
+    }
+
+    #[test]
+    fn agreement_holds_in_svo_sentences() {
+        let lex = Lexicon::new();
+        let mut g = Generator::new(&lex, Domain::Wiki2s, 2);
+        let mut checked = 0;
+        for _ in 0..200 {
+            let s = g.sentence();
+            let words: Vec<&str> = s.split(' ').collect();
+            if words.len() == 5 && words[0] == "the" && words[3] == "the" && words[2] != "likes" {
+                let noun_idx = lex.nouns.iter().position(|n| n == words[1]);
+                if let Some(ni) = noun_idx {
+                    let suffix = if lex.noun_class[ni] == 0 { "ra" } else { "ti" };
+                    assert!(words[2].ends_with(suffix), "{s}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 10, "not enough SVO sentences sampled");
+    }
+
+    #[test]
+    fn domains_differ() {
+        let lex = Lexicon::new();
+        let a = Generator::new(&lex, Domain::Wiki2s, 3).corpus(5000);
+        let b = Generator::new(&lex, Domain::C4s, 3).corpus(5000);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn math_sentences_are_consistent() {
+        let lex = Lexicon::new();
+        let mut g = Generator::new(&lex, Domain::Wiki2s, 4);
+        let mut checked = 0;
+        for _ in 0..500 {
+            let s = g.sentence();
+            let w: Vec<&str> = s.split(' ').collect();
+            if w.len() == 5 && w[1] == "plus" {
+                let d = |x: &str| DIGITS.iter().position(|&d| d == x).unwrap();
+                assert_eq!((d(w[0]) + d(w[2])) % 10, d(w[4]), "{s}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 5);
+    }
+}

@@ -1,0 +1,273 @@
+//! Zero-shot multiple-choice suites over synlang (lm-eval analogs).
+//!
+//! Each suite generates items with a prompt and N options, exactly one of
+//! which is consistent with the grammar/facts the training corpus teaches.
+//! Scoring (eval::tasks) follows LM-Evaluation-Harness: pick the option
+//! with the highest length-normalized log-likelihood as a continuation.
+
+use super::synlang::{Lexicon, N_NOUNS, N_OBJECTS, N_TOOLS, N_VERBS};
+use crate::util::rng::Rng;
+
+/// One multiple-choice item. `options` are continuations of `prompt`;
+/// `answer` indexes the correct one.
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+/// The seven suites (paper's zero-shot columns, in table order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    Openbook,  // Openb.  : noun -> liked object facts (4-way)
+    ArcEasy,   // ARC_e   : local agreement, weak distractors (4-way)
+    Winogrande, // WinoG. : agreement across a distractor noun (2-way)
+    Hellaswag, // HellaS. : verb-chain continuation (4-way)
+    ArcChallenge, // ARC_c: agreement with hard distractors (4-way)
+    Piqa,      // PIQA    : verb-tool affinity (2-way)
+    Mathqa,    // MathQA  : modular arithmetic (4-way)
+}
+
+pub const ALL_SUITES: [Suite; 7] = [
+    Suite::Openbook,
+    Suite::ArcEasy,
+    Suite::Winogrande,
+    Suite::Hellaswag,
+    Suite::ArcChallenge,
+    Suite::Piqa,
+    Suite::Mathqa,
+];
+
+impl Suite {
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Openbook => "Openb.",
+            Suite::ArcEasy => "ARC_e",
+            Suite::Winogrande => "WinoG.",
+            Suite::Hellaswag => "HellaS.",
+            Suite::ArcChallenge => "ARC_c",
+            Suite::Piqa => "PIQA",
+            Suite::Mathqa => "MathQA",
+        }
+    }
+
+    pub fn n_options(self) -> usize {
+        match self {
+            Suite::Winogrande | Suite::Piqa => 2,
+            _ => 4,
+        }
+    }
+
+    /// Generate `n` items with a deterministic seed.
+    pub fn items(self, lex: &Lexicon, n: usize, seed: u64) -> Vec<Item> {
+        let mut r = Rng::new(seed ^ (self as u64) << 32);
+        (0..n).map(|_| self.item(lex, &mut r)).collect()
+    }
+
+    fn item(self, lex: &Lexicon, r: &mut Rng) -> Item {
+        match self {
+            Suite::Openbook => {
+                let n = r.below(N_NOUNS);
+                let correct = lex.likes[n];
+                let mut opts = vec![correct];
+                while opts.len() < 4 {
+                    let o = r.below(N_OBJECTS);
+                    if !opts.contains(&o) {
+                        opts.push(o);
+                    }
+                }
+                shuffle_item(
+                    format!("the {} likes the", lex.nouns[n]),
+                    opts.iter().map(|&o| format!(" {}", lex.objects[o])).collect(),
+                    r,
+                )
+            }
+            Suite::ArcEasy => {
+                // "the <noun>" -> agreement-correct verb form; distractors are
+                // the wrong-class form + two *other* verbs in the wrong class.
+                let n = r.below(N_NOUNS);
+                let c = lex.noun_class[n];
+                let v = r.below(N_VERBS);
+                let mut options = vec![format!(" {}", lex.verb_form(v, c))];
+                options.push(format!(" {}", lex.verb_form(v, 1 - c)));
+                while options.len() < 4 {
+                    let v2 = r.below(N_VERBS);
+                    let o = format!(" {}", lex.verb_form(v2, 1 - c));
+                    if !options.contains(&o) {
+                        options.push(o);
+                    }
+                }
+                shuffle_item(format!("the {}", lex.nouns[n]), options, r)
+            }
+            Suite::Winogrande => {
+                // head-noun agreement across an other-class distractor
+                let n = r.below(N_NOUNS);
+                let c = lex.noun_class[n];
+                let other: Vec<usize> = (0..N_NOUNS)
+                    .filter(|&m| lex.noun_class[m] != c)
+                    .collect();
+                let d = other[r.below(other.len())];
+                let v = r.below(N_VERBS);
+                shuffle_item(
+                    format!("the {} near the {}", lex.nouns[n], lex.nouns[d]),
+                    vec![
+                        format!(" {}", lex.verb_form(v, c)),
+                        format!(" {}", lex.verb_form(v, 1 - c)),
+                    ],
+                    r,
+                )
+            }
+            Suite::Hellaswag => {
+                // chain continuation: preferred successor vs 3 non-successors
+                let v = r.below(N_VERBS);
+                let correct = lex.verb_next[v];
+                let mut opts = vec![correct];
+                while opts.len() < 4 {
+                    let w = r.below(N_VERBS);
+                    if w != correct && w != v && !opts.contains(&w) {
+                        opts.push(w);
+                    }
+                }
+                shuffle_item(
+                    format!("then {} then", lex.verbs[v]),
+                    opts.iter().map(|&w| format!(" {}", lex.verbs[w])).collect(),
+                    r,
+                )
+            }
+            Suite::ArcChallenge => {
+                // hard: distractor noun of the *same* class in between, options
+                // are agreement forms of 4 different verbs — model must both
+                // resolve agreement and prefer a plausible verb. Options share
+                // the correct class, so the cue is distributional, not
+                // morphological (harder than ARC_e by construction).
+                let n = r.below(N_NOUNS);
+                let c = lex.noun_class[n];
+                let same: Vec<usize> = (0..N_NOUNS)
+                    .filter(|&m| m != n && lex.noun_class[m] == c)
+                    .collect();
+                let d = same[r.below(same.len())];
+                let v = r.below(N_VERBS);
+                let mut options = vec![format!(" {}", lex.verb_form(v, c))];
+                options.push(format!(" {}", lex.verb_form(v, 1 - c)));
+                let v2 = (v + 1 + r.below(N_VERBS - 1)) % N_VERBS;
+                options.push(format!(" {}", lex.verb_form(v2, 1 - c)));
+                let v3 = (v + 1 + r.below(N_VERBS - 1)) % N_VERBS;
+                options.push(format!(" {}x", lex.verbs[v3])); // corrupt form
+                shuffle_item(
+                    format!("the {} near the {}", lex.nouns[n], lex.nouns[d]),
+                    options,
+                    r,
+                )
+            }
+            Suite::Piqa => {
+                let v = r.below(N_VERBS);
+                let correct = lex.verb_tool[v];
+                let mut wrong = r.below(N_TOOLS);
+                while wrong == correct {
+                    wrong = r.below(N_TOOLS);
+                }
+                shuffle_item(
+                    format!("{} with the", lex.verbs[v]),
+                    vec![
+                        format!(" {}", lex.tools[correct]),
+                        format!(" {}", lex.tools[wrong]),
+                    ],
+                    r,
+                )
+            }
+            Suite::Mathqa => {
+                let a = r.below(10);
+                let b = r.below(10);
+                let correct = (a + b) % 10;
+                let mut opts = vec![correct];
+                while opts.len() < 4 {
+                    let d = r.below(10);
+                    if !opts.contains(&d) {
+                        opts.push(d);
+                    }
+                }
+                shuffle_item(
+                    format!("{} plus {} eq", lex.digit(a), lex.digit(b)),
+                    opts.iter().map(|&d| format!(" {}", lex.digit(d))).collect(),
+                    r,
+                )
+            }
+        }
+    }
+}
+
+/// Shuffle options (answer currently at index 0), track the new answer.
+fn shuffle_item(prompt: String, mut options: Vec<String>, r: &mut Rng) -> Item {
+    let n = options.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    r.shuffle(&mut order);
+    let answer = order.iter().position(|&i| i == 0).unwrap();
+    options = order.iter().map(|&i| std::mem::take(&mut options[i])).collect();
+    Item { prompt, options, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_suites_generate() {
+        let lex = Lexicon::new();
+        for suite in ALL_SUITES {
+            let items = suite.items(&lex, 50, 7);
+            assert_eq!(items.len(), 50);
+            for it in &items {
+                assert_eq!(it.options.len(), suite.n_options());
+                assert!(it.answer < it.options.len());
+                assert!(!it.prompt.is_empty());
+                // options must be distinct
+                let mut o = it.options.clone();
+                o.sort();
+                o.dedup();
+                assert_eq!(o.len(), it.options.len(), "{it:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_shuffled() {
+        let lex = Lexicon::new();
+        let items = Suite::Openbook.items(&lex, 100, 3);
+        let first_count = items.iter().filter(|i| i.answer == 0).count();
+        assert!(first_count > 5 && first_count < 50, "{first_count}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let lex = Lexicon::new();
+        let a = Suite::Mathqa.items(&lex, 10, 42);
+        let b = Suite::Mathqa.items(&lex, 10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn openbook_answer_is_the_fact() {
+        let lex = Lexicon::new();
+        for it in Suite::Openbook.items(&lex, 30, 9) {
+            let noun = it.prompt.split(' ').nth(1).unwrap();
+            let ni = lex.nouns.iter().position(|n| n == noun).unwrap();
+            let want = format!(" {}", lex.objects[lex.likes[ni]]);
+            assert_eq!(it.options[it.answer], want);
+        }
+    }
+
+    #[test]
+    fn mathqa_answer_is_correct_sum() {
+        let lex = Lexicon::new();
+        for it in Suite::Mathqa.items(&lex, 30, 11) {
+            let w: Vec<&str> = it.prompt.split(' ').collect();
+            let d = |x: &str| (0..10).find(|&i| lex.digit(i) == x).unwrap();
+            let want = format!(" {}", lex.digit((d(w[0]) + d(w[2])) % 10));
+            assert_eq!(it.options[it.answer], want);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Evaluation harness: perplexity + zero-shot multiple-choice accuracy.
+//!
+//! PPL runs token streams through the AOT `dense_nll` artifact (compressed
+//! models are reconstructed W ≈ B·C first — numerically equivalent to the
+//! factored graph, see the integration tests). Zero-shot scoring follows
+//! LM-Evaluation-Harness: each option is scored by length-normalized
+//! log-likelihood as a continuation of the prompt, highest wins.
+
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::data::Batcher;
+use crate::model::lowrank::CompressedModel;
+use crate::model::Weights;
+use crate::runtime::{lit_i32, Engine};
+
+/// Perplexity of a dense model over a token stream.
+/// `max_batches` bounds cost; the stream is consumed sequentially.
+pub fn ppl_dense(
+    engine: &Engine,
+    weights: &Weights,
+    stream: &[u32],
+    max_batches: usize,
+) -> Result<f64> {
+    let cfg = weights.config;
+    engine.check_config(&cfg)?;
+    let batches = Batcher::eval_batches(stream, cfg.batch, cfg.seq, max_batches);
+    anyhow::ensure!(!batches.is_empty(), "stream too short for evaluation");
+    let wlits = engine.weight_literals(weights)?; // upload-once weight cache
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for batch in &batches {
+        let tok = lit_i32(batch, &[cfg.batch, cfg.seq])?;
+        let mut inputs: Vec<&xla::Literal> = wlits.iter().collect();
+        inputs.push(&tok);
+        let outs = engine.exec(cfg.name, "dense_nll", &inputs)?;
+        let nll = outs[0].to_vec::<f32>()?;
+        total += nll.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.len();
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Perplexity of a compressed model (dense reconstruction path).
+pub fn ppl_compressed(
+    engine: &Engine,
+    model: &CompressedModel,
+    stream: &[u32],
+    max_batches: usize,
+) -> Result<f64> {
+    let dense = model.to_dense();
+    ppl_dense(engine, &dense, stream, max_batches)
+}
+
+/// Sum of log-likelihoods of `cont` tokens following `prompt` tokens,
+/// computed from a per-token NLL row of a padded sequence.
+pub(crate) fn continuation_logprob(nll_row: &[f32], prompt_len: usize, cont_len: usize) -> f64 {
+    // nll_row[t] is the NLL of predicting token t+1; continuation tokens sit
+    // at sequence positions prompt_len .. prompt_len+cont_len-1, i.e. they
+    // are predicted at nll indices prompt_len-1 .. prompt_len+cont_len-2.
+    let start = prompt_len - 1;
+    -(nll_row[start..start + cont_len].iter().map(|&x| x as f64).sum::<f64>())
+}
+
+/// Batched NLL evaluator with padding for variable-length sequences.
+/// Weight literals are built once and reused across every batch.
+pub struct NllScorer<'a> {
+    engine: &'a Engine,
+    config: crate::model::ModelConfig,
+    wlits: Vec<xla::Literal>,
+}
+
+impl<'a> NllScorer<'a> {
+    pub fn new(engine: &'a Engine, weights: Weights) -> Result<Self> {
+        engine.check_config(&weights.config)?;
+        let wlits = engine.weight_literals(&weights)?;
+        Ok(Self { engine, config: weights.config, wlits })
+    }
+
+    /// Per-token NLL rows for a set of sequences (each <= cfg.seq long).
+    /// Sequences are padded with token 0 and packed into fixed batches.
+    pub fn nll_rows(&self, seqs: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let cfg = self.config;
+        let (bsz, s) = (cfg.batch, cfg.seq);
+        let mut rows = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(bsz) {
+            let mut batch = vec![0i32; bsz * s];
+            for (r, seq) in chunk.iter().enumerate() {
+                anyhow::ensure!(seq.len() <= s, "sequence longer than model seq");
+                for (i, &t) in seq.iter().enumerate() {
+                    batch[r * s + i] = t as i32;
+                }
+            }
+            let tok = lit_i32(&batch, &[bsz, s])?;
+            let mut inputs: Vec<&xla::Literal> = self.wlits.iter().collect();
+            inputs.push(&tok);
+            let outs = self.engine.exec(cfg.name, "dense_nll", &inputs)?;
+            let nll = outs[0].to_vec::<f32>()?;
+            for r in 0..chunk.len() {
+                rows.push(nll[r * (s - 1)..(r + 1) * (s - 1)].to_vec());
+            }
+        }
+        Ok(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuation_logprob_indexing() {
+        // prompt of 3 tokens, continuation of 2: indices 2 and 3
+        let nll = [10.0, 20.0, 1.0, 2.0, 40.0];
+        let lp = continuation_logprob(&nll, 3, 2);
+        assert!((lp - (-3.0)).abs() < 1e-9);
+        // whole-row continuation after a single-token prompt
+        let lp2 = continuation_logprob(&nll, 1, 5);
+        assert!((lp2 + 73.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Zero-shot task scoring (lm-eval style).
+//!
+//! For each item: tokenize prompt and each option separately (BPE merges
+//! never cross the prompt/option boundary — options start with a space and
+//! the tokenizer is word-bounded), score every (prompt ‖ option) sequence,
+//! and pick the option with the highest length-normalized continuation
+//! log-likelihood (acc_norm in lm-eval terms).
+
+use anyhow::Result;
+
+use super::{continuation_logprob, NllScorer};
+use crate::data::synlang::Lexicon;
+use crate::data::tasks::{Suite, ALL_SUITES};
+use crate::model::Weights;
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+
+/// Accuracy of one suite.
+pub fn run_suite(
+    engine: &Engine,
+    weights: &Weights,
+    tok: &Tokenizer,
+    lex: &Lexicon,
+    suite: Suite,
+    n_items: usize,
+    seed: u64,
+) -> Result<f64> {
+    let scorer = NllScorer::new(engine, weights.clone())?;
+    let items = suite.items(lex, n_items, seed);
+    let max_len = weights.config.seq;
+
+    // flatten all (prompt||option) sequences to score in packed batches
+    let mut seqs: Vec<Vec<u32>> = Vec::new();
+    let mut meta: Vec<(usize, usize, usize)> = Vec::new(); // (item, prompt_len, cont_len)
+    for item in &items {
+        let p = tok.encode(&item.prompt);
+        for opt in &item.options {
+            let c = tok.encode(opt);
+            let mut s = p.clone();
+            s.extend(&c);
+            anyhow::ensure!(!p.is_empty() && !c.is_empty(), "empty encoding");
+            anyhow::ensure!(s.len() <= max_len, "item longer than model seq");
+            meta.push((0, p.len(), c.len()));
+            seqs.push(s);
+        }
+    }
+    let rows = scorer.nll_rows(&seqs)?;
+
+    // pick argmax per item
+    let mut correct = 0usize;
+    let mut ri = 0usize;
+    for item in &items {
+        let mut best = (f64::MIN, 0usize);
+        for (oi, _) in item.options.iter().enumerate() {
+            let (_, plen, clen) = meta[ri];
+            let lp = continuation_logprob(&rows[ri], plen, clen) / clen as f64;
+            if lp > best.0 {
+                best = (lp, oi);
+            }
+            ri += 1;
+        }
+        if best.1 == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+/// Accuracy over all seven suites + their mean (the paper's Average*).
+pub fn run_all_suites(
+    engine: &Engine,
+    weights: &Weights,
+    tok: &Tokenizer,
+    lex: &Lexicon,
+    n_items: usize,
+    seed: u64,
+) -> Result<(Vec<(Suite, f64)>, f64)> {
+    let mut out = Vec::new();
+    for suite in ALL_SUITES {
+        let acc = run_suite(engine, weights, tok, lex, suite, n_items, seed)?;
+        out.push((suite, acc));
+    }
+    let avg = out.iter().map(|(_, a)| a).sum::<f64>() / out.len() as f64;
+    Ok((out, avg))
+}
+
+/// Chance-level accuracy of a suite (for sanity checks and reporting).
+pub fn chance(suite: Suite) -> f64 {
+    1.0 / suite.n_options() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chance_levels() {
+        assert_eq!(chance(Suite::Winogrande), 0.5);
+        assert_eq!(chance(Suite::Mathqa), 0.25);
+    }
+
+    #[test]
+    fn items_fit_tiny_seq() {
+        // every generated item must tokenize within the smallest model's seq
+        let lex = Lexicon::new();
+        let corpus = crate::data::synlang::Generator::new(
+            &lex,
+            crate::data::synlang::Domain::Wiki2s,
+            1,
+        )
+        .corpus(200_000);
+        let tok = Tokenizer::train(&corpus, 256);
+        for suite in ALL_SUITES {
+            for item in suite.items(&lex, 40, 3) {
+                let p = tok.encode(&item.prompt);
+                assert!(!p.is_empty());
+                for opt in &item.options {
+                    let c = tok.encode(opt);
+                    assert!(!c.is_empty(), "{item:?}");
+                    assert!(p.len() + c.len() <= 64, "{item:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_is_word_aligned() {
+        // encode(prompt) + encode(option) == encode(prompt + option),
+        // guaranteeing continuation_logprob indexes real token boundaries
+        let lex = Lexicon::new();
+        let corpus = crate::data::synlang::Generator::new(
+            &lex,
+            crate::data::synlang::Domain::Wiki2s,
+            2,
+        )
+        .corpus(100_000);
+        let tok = Tokenizer::train(&corpus, 256);
+        for item in Suite::Openbook.items(&lex, 20, 5) {
+            let full = tok.encode(&format!("{}{}", item.prompt, item.options[0]));
+            let mut parts = tok.encode(&item.prompt);
+            parts.extend(tok.encode(&item.options[0]));
+            assert_eq!(full, parts, "{item:?}");
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Runtime graph builder: the compressed forward pass with *exact* dynamic
+//! ranks, constructed in Rust via `XlaBuilder` and compiled by the
+//! in-process PJRT client.
+//!
+//! Rank allocations are data-dependent (effective ranks come from
+//! calibration), so they cannot be baked into build-time artifacts; this is
+//! the same pattern as vLLM capturing CUDA graphs per shape. Python is
+//! never involved. Semantics mirror `python/compile/model.py` exactly —
+//! cross-checked against the AOT dense artifact and the pure-Rust forward
+//! in the integration tests.
+//!
+//! Note: the xla crate's `XlaOp::matmul` reads the *lhs* shape for both
+//! operands (upstream bug), so this module always uses `dot_general`.
+
+use anyhow::Result;
+
+use crate::model::lowrank::CompressedModel;
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::{lit_f32, Runtime};
+use crate::tensor::Mat32;
+
+const EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 1e4;
+
+type B = xla::XlaBuilder;
+type Op = xla::XlaOp;
+
+/// A compiled forward graph + the weight literals it expects (after the
+/// leading tokens parameter, in order).
+pub struct CompiledForward {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl CompiledForward {
+    /// Per-token NLL for a [batch, seq] token batch -> [batch, seq-1].
+    pub fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.batch * self.seq);
+        let tok = crate::runtime::lit_i32(tokens, &[self.batch, self.seq])?;
+        let mut inputs: Vec<&xla::Literal> = vec![&tok];
+        inputs.extend(self.weights.iter());
+        let result = self.exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+/// Track parameters as they are declared.
+struct Params<'a> {
+    b: &'a B,
+    next: i64,
+    literals: Vec<xla::Literal>,
+}
+
+impl<'a> Params<'a> {
+    fn add(&mut self, name: &str, dims: &[usize], data: &[f32]) -> Result<Op> {
+        let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let op = self.b.parameter(self.next, xla::ElementType::F32, &dims_i, name)?;
+        self.next += 1;
+        self.literals.push(lit_f32(data, dims)?);
+        Ok(op)
+    }
+
+    fn add_mat(&mut self, name: &str, m: &Mat32) -> Result<Op> {
+        self.add(name, &[m.rows, m.cols], &m.data)
+    }
+}
+
+/// Build + compile the forward NLL graph for a (possibly) compressed model.
+/// Dense types emit one matmul; factored types emit x·B then ·C with the
+/// exact allocated rank per layer.
+pub fn compile_forward(
+    rt: &Runtime,
+    model: &CompressedModel,
+    batch: usize,
+    seq: usize,
+) -> Result<CompiledForward> {
+    let cfg = model.config();
+    let builder = B::new(&format!("fwd_{}", cfg.name));
+    let mut params = Params { b: &builder, next: 0, literals: Vec::new() };
+
+    let t = seq - 1; // predict positions 1..seq
+    let tokens = builder.parameter(
+        0,
+        xla::ElementType::S32,
+        &[batch as i64, seq as i64],
+        "tokens",
+    )?;
+    params.next = 1;
+    let inputs = tokens.slice_in_dim1(0, t as i64, 1)?; // [B, T]
+    let targets = tokens.slice_in_dim1(1, seq as i64, 1)?; // [B, T]
+
+    let w = &model.base;
+    let embed = params.add("embed", &w.tensors[0].shape, &w.tensors[0].data)?;
+    let mut x = embed.take(&inputs, 0)?; // [B, T, d]
+
+    let (cos, sin) = rope_constants(&builder, t, cfg.head_dim())?;
+    for l in 0..cfg.layers {
+        x = layer_block(&builder, &mut params, model, &cfg, l, x, &cos, &sin, batch, t)?;
+    }
+    let fnorm = params.add("final_norm", &[cfg.d], &w.by_name("final_norm").data)?;
+    let x = rmsnorm(&builder, &x, &fnorm)?;
+    let lm = params.add("lm_head", &[cfg.d, cfg.vocab], &w.by_name("lm_head").data)?;
+    let logits = matmul2(&x, &lm)?; // [B, T, V]
+
+    // nll = logsumexp - picked
+    let maxv = logits.reduce_max(&[-1], true)?;
+    let shifted = logits.sub_(&maxv)?;
+    let logz = shifted
+        .exp()?
+        .reduce_sum(&[-1], false)?
+        .log()?
+        .add_(&maxv.reshape(&[batch as i64, t as i64])?)?;
+    // one-hot pick via iota == target
+    let iota = builder.iota(xla::ElementType::S32, &[cfg.vocab as i64], 0)?;
+    let iota_b = iota.broadcast_in_dim(
+        &[batch as i64, t as i64, cfg.vocab as i64],
+        &[2],
+    )?;
+    let tgt = targets
+        .reshape(&[batch as i64, t as i64, 1])?
+        .broadcast_in_dim(&[batch as i64, t as i64, cfg.vocab as i64], &[0, 1, 2])?;
+    let onehot = iota_b.eq(&tgt)?.convert(xla::PrimitiveType::F32)?;
+    let picked = logits.mul_(&onehot)?.reduce_sum(&[-1], false)?;
+    let nll = logz.sub_(&picked)?;
+
+    let comp = builder.build(&builder.tuple(&[nll])?)?;
+    let exe = rt.client().compile(&comp)?;
+    Ok(CompiledForward { exe, weights: params.literals, batch, seq })
+}
+
+/// Convenience: compile the *dense* forward of plain weights.
+pub fn compile_dense(
+    rt: &Runtime,
+    weights: &Weights,
+    batch: usize,
+    seq: usize,
+) -> Result<CompiledForward> {
+    let model = CompressedModel::dense_passthrough(weights.clone());
+    compile_forward(rt, &model, batch, seq)
+}
+
+// --------------------------------------------------------------------------
+
+fn rope_constants(b: &B, t: usize, hd: usize) -> Result<(Op, Op)> {
+    let half = hd / 2;
+    let mut cos = vec![0.0f32; t * half];
+    let mut sin = vec![0.0f32; t * half];
+    for p in 0..t {
+        for i in 0..half {
+            let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+            let ang = p as f32 * freq;
+            cos[p * half + i] = ang.cos();
+            sin[p * half + i] = ang.sin();
+        }
+    }
+    Ok((
+        b.constant_literal(&lit_f32(&cos, &[t, half])?)?,
+        b.constant_literal(&lit_f32(&sin, &[t, half])?)?,
+    ))
+}
+
+/// x[..., :half]*cos - x[..., half:]*sin ‖ x[..., half:]*cos + x[..., :half]*sin
+/// x: [B, T, H, hd]; cos/sin: [T, half].
+fn apply_rope(x: &Op, cos: &Op, sin: &Op, batch: usize, t: usize, h: usize, hd: usize) -> Result<Op> {
+    let half = (hd / 2) as i64;
+    let dims = [batch as i64, t as i64, h as i64, half];
+    let c = cos.broadcast_in_dim(&dims, &[1, 3])?;
+    let s = sin.broadcast_in_dim(&dims, &[1, 3])?;
+    let x1 = x.slice_in_dim1(0, half, 3)?;
+    let x2 = x.slice_in_dim1(half, hd as i64, 3)?;
+    let lo = x1.mul_(&c)?.sub_(&x2.mul_(&s)?)?;
+    let hi = x2.mul_(&c)?.add_(&x1.mul_(&s)?)?;
+    Ok(lo.concat_in_dim(&[&hi], 3)?)
+}
+
+fn rmsnorm(_b: &B, x: &Op, w: &Op) -> Result<Op> {
+    let ms = x.mul_(x)?.reduce_mean(&[-1], true)?;
+    let builder = x.builder();
+    let eps = builder.c0(EPS)?;
+    let dims = x.dims()?;
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    let inv = ms.add_(&eps)?.rsqrt()?;
+    let wb = w.broadcast_in_dim(&dims_i, &[dims_i.len() as i64 - 1])?;
+    Ok(x.mul_(&inv)?.mul_(&wb)?)
+}
+
+/// [B, T, d1] x [d1, d2] -> [B, T, d2].
+fn matmul2(x: &Op, w: &Op) -> Result<Op> {
+    Ok(x.dot_general(w, &[2], &[0], &[], &[])?)
+}
+
+/// Apply a (possibly factored) projection for layer l of `typ`.
+fn project(
+    params: &mut Params,
+    model: &CompressedModel,
+    typ: &str,
+    l: usize,
+    x: &Op,
+) -> Result<Op> {
+    if let Some((bmat, cmat)) = model.layer_factors(typ, l) {
+        let bp = params.add_mat(&format!("{typ}_{l}_b"), bmat)?;
+        let cp = params.add_mat(&format!("{typ}_{l}_c"), cmat)?;
+        matmul2(&matmul2(x, &bp)?, &cp)
+    } else {
+        let pidx = ModelConfig::param_index(typ);
+        let m = model.base.tensors[pidx].layer_mat(l);
+        let wp = params.add_mat(&format!("{typ}_{l}"), &m)?;
+        matmul2(x, &wp)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer_block(
+    b: &B,
+    params: &mut Params,
+    model: &CompressedModel,
+    cfg: &ModelConfig,
+    l: usize,
+    x: Op,
+    cos: &Op,
+    sin: &Op,
+    batch: usize,
+    t: usize,
+) -> Result<Op> {
+    let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
+    let (bi, ti) = (batch as i64, t as i64);
+    let w = &model.base;
+
+    // ---- attention ----
+    let an_data = &w.by_name("attn_norm").data[l * d..(l + 1) * d];
+    let an = params.add(&format!("attn_norm_{l}"), &[d], an_data)?;
+    let xn = rmsnorm(b, &x, &an)?;
+
+    let q = project(params, model, "wq", l, &xn)?
+        .reshape(&[bi, ti, h as i64, hd as i64])?;
+    let k = project(params, model, "wk", l, &xn)?
+        .reshape(&[bi, ti, kvh as i64, hd as i64])?;
+    let v = project(params, model, "wv", l, &xn)?
+        .reshape(&[bi, ti, kvh as i64, hd as i64])?;
+    let q = apply_rope(&q, cos, sin, batch, t, h, hd)?;
+    let k = apply_rope(&k, cos, sin, batch, t, kvh, hd)?;
+    // GQA: repeat kv heads
+    let (k, v) = if kvh != h {
+        let rep = (h / kvh) as i64;
+        let expand = |op: &Op| -> Result<Op> {
+            op.reshape(&[bi, ti, kvh as i64, 1, hd as i64])?
+                .broadcast_in_dim(
+                    &[bi, ti, kvh as i64, rep, hd as i64],
+                    &[0, 1, 2, 3, 4],
+                )?
+                .reshape(&[bi, ti, h as i64, hd as i64])
+                .map_err(anyhow::Error::from)
+        };
+        (expand(&k)?, expand(&v)?)
+    } else {
+        (k, v)
+    };
+    // [B, T, H, hd] -> [B, H, T, hd]
+    let qt = q.transpose(&[0, 2, 1, 3])?;
+    let kt = k.transpose(&[0, 2, 1, 3])?;
+    let vt = v.transpose(&[0, 2, 1, 3])?;
+    let scale = b.c0(1.0f32 / (hd as f32).sqrt())?;
+    let scores = qt
+        .dot_general(&kt, &[3], &[3], &[0, 1], &[0, 1])?
+        .mul_(&scale.broadcast_in_dim(&[bi, h as i64, ti, ti], &[])?)?;
+    // causal mask
+    let qi = b.iota(xla::ElementType::S32, &[ti, ti], 0)?;
+    let ki = b.iota(xla::ElementType::S32, &[ti, ti], 1)?;
+    let mask = ki.le(&qi)?.broadcast_in_dim(&[bi, h as i64, ti, ti], &[2, 3])?;
+    let neg = b.c0(-1e30f32)?.broadcast_in_dim(&[bi, h as i64, ti, ti], &[])?;
+    let scores = mask.select(&scores, &neg)?;
+    let probs = scores.softmax(-1)?;
+    let ctx = probs.dot_general(&vt, &[3], &[2], &[0, 1], &[0, 1])?; // [B,H,T,hd]
+    let ctx = ctx.transpose(&[0, 2, 1, 3])?.reshape(&[bi, ti, d as i64])?;
+    let attn_out = project(params, model, "wo", l, &ctx)?;
+    let x = x.add_(&attn_out)?;
+
+    // ---- mlp ----
+    let mn_data = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
+    let mn = params.add(&format!("mlp_norm_{l}"), &[d], mn_data)?;
+    let xm = rmsnorm(b, &x, &mn)?;
+    let g = project(params, model, "w_gate", l, &xm)?;
+    let u = project(params, model, "w_up", l, &xm)?;
+    let hmid = g.silu()?.mul_(&u)?;
+    let mlp_out = project(params, model, "w_down", l, &hmid)?;
+    Ok(x.add_(&mlp_out)?)
+}

@@ -1,0 +1,30 @@
+//! # D-Rank: layer-wise dynamic rank allocation for LLM compression
+//!
+//! Reproduction of *"Layer-wise Dynamic Rank for Compressing Large Language
+//! Models"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1 (Pallas, build-time)**: fused low-rank matmul, Gram accumulation,
+//!   flash attention — `python/compile/kernels/`.
+//! - **L2 (JAX, build-time)**: the tinylm transformer family, AOT-lowered to
+//!   HLO-text artifacts — `python/compile/model.py` + `aot.py`.
+//! - **L3 (this crate, runtime)**: the compression framework (effective
+//!   rank, Lagrange allocation, β-rebalancing, six methods), calibration,
+//!   evaluation, and a batching serving coordinator over PJRT.
+//!
+//! Python never runs on the request path; the compressed forward pass with
+//! exact dynamic ranks is built at runtime via `XlaBuilder` (`graph`).
+
+pub mod calib;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod graph;
+pub mod linalg;
+pub mod lora;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

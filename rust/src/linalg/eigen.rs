@@ -1,0 +1,191 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Sizes here are <= ~768 (the smaller Gram side of a grouped weight
+//! matrix), where Jacobi's O(n³) per sweep with quadratic convergence is
+//! fast, simple, and — importantly for effective-rank computation — highly
+//! accurate for small eigenvalues compared to tridiagonalization at f64.
+
+use crate::tensor::MatF;
+
+/// Result of a symmetric eigendecomposition A = V diag(w) Vᵀ,
+/// eigenvalues sorted descending, V columns the matching eigenvectors.
+pub struct Eigen {
+    pub values: Vec<f64>,
+    pub vectors: MatF, // column i <-> values[i]
+}
+
+/// Cyclic Jacobi with threshold sweeping. `a` must be symmetric.
+pub fn jacobi_eigen(a: &MatF) -> Eigen {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = MatF::identity(n);
+    if n <= 1 {
+        return sort_eigen(vec![if n == 1 { m.at(0, 0) } else { 0.0 }; n.min(1)], v);
+    }
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let off: f64 = {
+            let mut s = 0.0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    s += m.at(i, j) * m.at(i, j);
+                }
+            }
+            s
+        };
+        let scale: f64 = m.data.iter().map(|x| x * x).sum();
+        if off <= 1e-26 * scale.max(1e-300) {
+            break;
+        }
+        // threshold sweeping: rotations on negligible off-diagonal entries
+        // cost O(n) each but reduce the objective by ~0; skipping them cuts
+        // late sweeps to near no-ops (measured 1.9x on 192x384 inputs —
+        // EXPERIMENTS.md §Perf)
+        let thresh = (off / (n * n) as f64).sqrt() * 0.5;
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= thresh || apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // rotation angle via the stable tau formulation
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    1.0 / (tau - (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                rotate(&mut m, p, q, c, s);
+                rotate_cols(&mut v, p, q, c, s);
+            }
+        }
+    }
+    let values: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    sort_eigen(values, v)
+}
+
+/// Apply the two-sided rotation J(p,q,θ)ᵀ M J(p,q,θ) in place.
+fn rotate(m: &mut MatF, p: usize, q: usize, c: f64, s: f64) {
+    let n = m.rows;
+    for k in 0..n {
+        let mkp = m.at(k, p);
+        let mkq = m.at(k, q);
+        *m.at_mut(k, p) = c * mkp - s * mkq;
+        *m.at_mut(k, q) = s * mkp + c * mkq;
+    }
+    for k in 0..n {
+        let mpk = m.at(p, k);
+        let mqk = m.at(q, k);
+        *m.at_mut(p, k) = c * mpk - s * mqk;
+        *m.at_mut(q, k) = s * mpk + c * mqk;
+    }
+}
+
+/// Accumulate the rotation into the eigenvector matrix (columns p, q).
+fn rotate_cols(v: &mut MatF, p: usize, q: usize, c: f64, s: f64) {
+    for k in 0..v.rows {
+        let vkp = v.at(k, p);
+        let vkq = v.at(k, q);
+        *v.at_mut(k, p) = c * vkp - s * vkq;
+        *v.at_mut(k, q) = s * vkp + c * vkq;
+    }
+}
+
+fn sort_eigen(values: Vec<f64>, vectors: MatF) -> Eigen {
+    let n = values.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| values[b].partial_cmp(&values[a]).unwrap());
+    let sorted_vals: Vec<f64> = idx.iter().map(|&i| values[i]).collect();
+    let mut sorted_vecs = MatF::zeros(vectors.rows, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for r in 0..vectors.rows {
+            *sorted_vecs.at_mut(r, new_c) = vectors.at(r, old_c);
+        }
+    }
+    Eigen { values: sorted_vals, vectors: sorted_vecs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> MatF {
+        let mut m = MatF::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.normal();
+                *m.at_mut(i, j) = x;
+                *m.at_mut(j, i) = x;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(0);
+        for n in [1, 2, 5, 33, 80] {
+            let a = random_sym(&mut rng, n);
+            let e = jacobi_eigen(&a);
+            // A V = V diag(w)
+            let av = a.matmul(&e.vectors);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = e.vectors.at(i, j) * e.values[j];
+                    assert!((av.at(i, j) - want).abs() < 1e-8, "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let mut rng = Rng::new(1);
+        let a = random_sym(&mut rng, 20);
+        let e = jacobi_eigen(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = random_sym(&mut rng, 25);
+        let e = jacobi_eigen(&a);
+        let vtv = e.vectors.t_matmul(&e.vectors);
+        for i in 0..25 {
+            for j in 0..25 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = MatF::zeros(4, 4);
+        for (i, v) in [3.0, -1.0, 7.0, 0.5].iter().enumerate() {
+            *a.at_mut(i, i) = *v;
+        }
+        let e = jacobi_eigen(&a);
+        assert_eq!(e.values, vec![7.0, 3.0, 0.5, -1.0]);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(3);
+        let a = random_sym(&mut rng, 40);
+        let tr: f64 = (0..40).map(|i| a.at(i, i)).sum();
+        let e = jacobi_eigen(&a);
+        let sum: f64 = e.values.iter().sum();
+        assert!((tr - sum).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,216 @@
+//! Numerical linear algebra substrate (f64).
+//!
+//! Everything the compression pipeline needs, built from scratch:
+//! Cholesky with adaptive jitter (whitening S from possibly rank-deficient
+//! calibration Grams), triangular solves (applying S^-1 without forming an
+//! inverse), a cyclic Jacobi symmetric eigensolver, SVD via the smaller-side
+//! Gram eigendecomposition, and the paper's spectral-entropy effective rank.
+//!
+//! Precision note: the paper computes S in FP64 (§4.1); this module is f64
+//! end-to-end and only converts to f32 when handing factors to the runtime.
+
+pub mod eigen;
+pub mod svd;
+
+use crate::tensor::MatF;
+
+/// Lower-triangular Cholesky: G = L·Lᵀ for symmetric PSD G.
+///
+/// Adds an escalating diagonal jitter (relative to mean diagonal) when the
+/// matrix is semi-definite — calibration Grams of narrow layers routinely
+/// are. Returns (L, jitter_used).
+pub fn cholesky_jitter(g: &MatF) -> (MatF, f64) {
+    assert_eq!(g.rows, g.cols, "cholesky needs square input");
+    let n = g.rows;
+    let mean_diag = (0..n).map(|i| g.at(i, i)).sum::<f64>() / n as f64;
+    let mut jitter = 0.0;
+    for attempt in 0..12 {
+        if attempt > 0 {
+            jitter = mean_diag.max(1e-300) * 1e-10 * 10f64.powi(attempt - 1);
+        }
+        if let Some(l) = try_cholesky(g, jitter) {
+            return (l, jitter);
+        }
+    }
+    panic!("cholesky failed even with jitter {jitter:.3e}");
+}
+
+fn try_cholesky(g: &MatF, jitter: f64) -> Option<MatF> {
+    let n = g.rows;
+    let mut l = MatF::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = g.at(i, j) + if i == j { jitter } else { 0.0 };
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·X = B for lower-triangular L (forward substitution), column-wise.
+pub fn solve_lower(l: &MatF, b: &MatF) -> MatF {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for i in 0..n {
+        let lii = l.at(i, i);
+        for k in 0..i {
+            let lik = l.at(i, k);
+            if lik == 0.0 {
+                continue;
+            }
+            // x[i,:] -= l[i,k] * x[k,:]
+            let (head, tail) = x.data.split_at_mut(i * x.cols);
+            let xk = &head[k * x.cols..(k + 1) * x.cols];
+            let xi = &mut tail[..x.cols];
+            for j in 0..x.cols {
+                xi[j] -= lik * xk[j];
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve Lᵀ·X = B for lower-triangular L (back substitution), column-wise.
+pub fn solve_lower_t(l: &MatF, b: &MatF) -> MatF {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let lii = l.at(i, i);
+        for k in i + 1..n {
+            let lki = l.at(k, i); // (Lᵀ)[i,k]
+            if lki == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(k * x.cols);
+            let xi = &mut head[i * x.cols..(i + 1) * x.cols];
+            let xk = &tail[..x.cols];
+            for j in 0..x.cols {
+                xi[j] -= lki * xk[j];
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Effective rank of a singular-value spectrum (paper Eq. 1-2):
+/// p_i = σ_i² / Σσ²,  R_eff = exp(−Σ p_i ln p_i).
+pub fn effective_rank(sigma: &[f64]) -> f64 {
+    let total: f64 = sigma.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for s in sigma {
+        let p = s * s / total;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> MatF {
+        let a = MatF::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        let mut g = a.t_matmul(&a);
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(0);
+        for n in [1, 3, 17, 64] {
+            let g = random_spd(&mut rng, n);
+            let (l, jit) = cholesky_jitter(&g);
+            assert_eq!(jit, 0.0);
+            let rec = l.matmul(&l.transpose());
+            for (a, b) in rec.data.iter().zip(&g.data) {
+                assert!((a - b).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_handles_semidefinite() {
+        // rank-1 Gram: needs jitter, must not panic
+        let v = MatF::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let g = v.t_matmul(&v);
+        let (l, jit) = cholesky_jitter(&g);
+        assert!(jit > 0.0);
+        assert!(l.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn solves_invert_cholesky() {
+        let mut rng = Rng::new(1);
+        let g = random_spd(&mut rng, 12);
+        let (l, _) = cholesky_jitter(&g);
+        let b = MatF::from_vec(12, 5, (0..60).map(|_| rng.normal()).collect());
+        // L (L^-1 B) == B
+        let x = solve_lower(&l, &b);
+        let rec = l.matmul(&x);
+        for (a, bb) in rec.data.iter().zip(&b.data) {
+            assert!((a - bb).abs() < 1e-8);
+        }
+        // Lᵀ (L^-T B) == B
+        let y = solve_lower_t(&l, &b);
+        let rec2 = l.transpose().matmul(&y);
+        for (a, bb) in rec2.data.iter().zip(&b.data) {
+            assert!((a - bb).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn effective_rank_uniform_spectrum() {
+        // k equal singular values -> R_eff == k
+        let s = vec![2.0; 7];
+        assert!((effective_rank(&s) - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn effective_rank_single_dominant() {
+        let s = [100.0, 1e-8, 1e-8];
+        assert!((effective_rank(&s) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn effective_rank_monotone_in_spread() {
+        // a flatter spectrum has a larger effective rank
+        let flat = effective_rank(&[1.0, 0.9, 0.8, 0.7]);
+        let peaked = effective_rank(&[1.0, 0.1, 0.05, 0.01]);
+        assert!(flat > peaked);
+        assert!(flat <= 4.0 + 1e-9);
+        assert!(peaked >= 1.0);
+    }
+
+    #[test]
+    fn effective_rank_empty_and_zero() {
+        assert_eq!(effective_rank(&[]), 0.0);
+        assert_eq!(effective_rank(&[0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Thin SVD via eigendecomposition of the smaller-side Gram matrix.
+//!
+//! For A (m×n), eigendecompose AAᵀ (if m<=n) or AᵀA, then recover the
+//! other factor by projection. The smaller side here is at most ~768
+//! (d or dff), so the Jacobi solve dominates and stays well under a
+//! second per matrix. Accuracy of small singular triplets is limited by
+//! the squaring (σ ~ sqrt(eps) floor); the compression pipeline only
+//! consumes the *leading* k triplets and the σ² distribution (effective
+//! rank), both of which the Gram route computes accurately at f64.
+
+use super::eigen::jacobi_eigen;
+use crate::tensor::MatF;
+
+/// Thin SVD A = U diag(s) Vᵀ with singular values sorted descending.
+pub struct Svd {
+    pub u: MatF,       // m × r
+    pub s: Vec<f64>,   // r
+    pub vt: MatF,      // r × n
+}
+
+/// Compute the thin SVD (r = min(m, n)).
+pub fn svd(a: &MatF) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
+    if m <= n {
+        // AAᵀ = U Λ Uᵀ ;  Vᵀ = Σ⁻¹ Uᵀ A
+        let g = gram_right(a); // A Aᵀ, m×m
+        let e = jacobi_eigen(&g);
+        let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
+        let u = e.vectors; // m×m, columns sorted
+        let uta = u.t_matmul(a); // m×n
+        let mut vt = MatF::zeros(r, n);
+        for i in 0..r {
+            let inv = if s[i] > sv_floor(&s) { 1.0 / s[i] } else { 0.0 };
+            for j in 0..n {
+                *vt.at_mut(i, j) = uta.at(i, j) * inv;
+            }
+        }
+        let mut u_thin = MatF::zeros(m, r);
+        for i in 0..m {
+            for j in 0..r {
+                *u_thin.at_mut(i, j) = u.at(i, j);
+            }
+        }
+        Svd { u: u_thin, s, vt }
+    } else {
+        // AᵀA = V Λ Vᵀ ;  U = A V Σ⁻¹
+        let g = a.t_matmul(a); // n×n
+        let e = jacobi_eigen(&g);
+        let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
+        let v = e.vectors; // n×n
+        let av = a.matmul(&v); // m×n
+        let mut u = MatF::zeros(m, r);
+        for j in 0..r {
+            let inv = if s[j] > sv_floor(&s) { 1.0 / s[j] } else { 0.0 };
+            for i in 0..m {
+                *u.at_mut(i, j) = av.at(i, j) * inv;
+            }
+        }
+        let mut vt = MatF::zeros(r, n);
+        for i in 0..r {
+            for j in 0..n {
+                *vt.at_mut(i, j) = v.at(j, i);
+            }
+        }
+        Svd { u, s, vt }
+    }
+}
+
+/// Relative floor below which singular triplets are treated as null.
+fn sv_floor(s: &[f64]) -> f64 {
+    s.first().copied().unwrap_or(0.0) * 1e-12
+}
+
+/// A Aᵀ (m×m) without materializing the transpose.
+fn gram_right(a: &MatF) -> MatF {
+    let m = a.rows;
+    let mut g = MatF::zeros(m, m);
+    for i in 0..m {
+        let ri = a.row(i);
+        for j in 0..=i {
+            let rj = a.row(j);
+            let s: f64 = ri.iter().zip(rj).map(|(x, y)| x * y).sum();
+            *g.at_mut(i, j) = s;
+            *g.at_mut(j, i) = s;
+        }
+    }
+    g
+}
+
+impl Svd {
+    /// Rank-k truncated reconstruction U_k Σ_k V_kᵀ.
+    pub fn reconstruct(&self, k: usize) -> MatF {
+        let k = k.min(self.s.len());
+        let (m, n) = (self.u.rows, self.vt.cols);
+        let mut out = MatF::zeros(m, n);
+        for t in 0..k {
+            let sv = self.s[t];
+            if sv == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let ui = self.u.at(i, t) * sv;
+                if ui == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(t);
+                for j in 0..n {
+                    orow[j] += ui * vrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Truncated factors (B, C) with B = U_k Σ_k (m×k), C = V_kᵀ (k×n).
+    pub fn factors(&self, k: usize) -> (MatF, MatF) {
+        let k = k.min(self.s.len());
+        let (m, n) = (self.u.rows, self.vt.cols);
+        let mut b = MatF::zeros(m, k);
+        for i in 0..m {
+            for t in 0..k {
+                *b.at_mut(i, t) = self.u.at(i, t) * self.s[t];
+            }
+        }
+        let mut c = MatF::zeros(k, n);
+        for t in 0..k {
+            c.row_mut(t).copy_from_slice(&self.vt.row(t)[..n]);
+        }
+        (b, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::effective_rank;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, m: usize, n: usize) -> MatF {
+        MatF::from_vec(m, n, (0..m * n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn full_rank_reconstruction_both_orientations() {
+        let mut rng = Rng::new(0);
+        for &(m, n) in &[(10, 25), (25, 10), (16, 16), (1, 8), (8, 1)] {
+            let a = random(&mut rng, m, n);
+            let d = svd(&a);
+            let rec = d.reconstruct(m.min(n));
+            let err = rec.sub(&a).frob_norm() / a.frob_norm();
+            assert!(err < 1e-8, "({m},{n}) err {err}");
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 30, 12);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn truncation_is_best_rank_k() {
+        // Eckart–Young sanity: rank-k error equals sqrt(sum of tail σ²)
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 20, 14);
+        let d = svd(&a);
+        for k in [1, 3, 7] {
+            let err = d.reconstruct(k).sub(&a).frob_norm();
+            let want: f64 = d.s[k..].iter().map(|s| s * s).sum::<f64>().sqrt();
+            assert!((err - want).abs() < 1e-8, "k={k}");
+        }
+    }
+
+    #[test]
+    fn factors_match_reconstruction() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, 12, 18);
+        let d = svd(&a);
+        let (b, c) = d.factors(5);
+        let rec = b.matmul(&c);
+        let want = d.reconstruct(5);
+        for (x, y) in rec.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn known_rank_detected() {
+        // build an exactly rank-3 matrix
+        let mut rng = Rng::new(4);
+        let b = random(&mut rng, 15, 3);
+        let c = random(&mut rng, 3, 22);
+        let a = b.matmul(&c);
+        let d = svd(&a);
+        assert!(d.s[2] > 1e-6);
+        assert!(d.s[3] < 1e-6 * d.s[0]);
+        let reff = effective_rank(&d.s);
+        assert!(reff <= 3.0 + 1e-6 && reff > 1.0, "reff {reff}");
+    }
+
+    #[test]
+    fn orthonormal_u_v() {
+        let mut rng = Rng::new(5);
+        let a = random(&mut rng, 9, 21);
+        let d = svd(&a);
+        let utu = d.u.t_matmul(&d.u);
+        let vvt = d.vt.matmul(&d.vt.transpose());
+        for i in 0..9 {
+            for j in 0..9 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - want).abs() < 1e-8);
+                assert!((vvt.at(i, j) - want).abs() < 1e-8);
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! D-Rank CLI: train / compress / eval / serve / info.
+//!
+//! ```text
+//! drank train    --model m --steps 400 [--lr 3e-3] [--scale 1.0]
+//! drank compress --model m --method drank --ratio 0.2 [--group 2]
+//!                [--beta 0.3] [--compensate] [--calib wiki2s] [--eval]
+//! drank eval     --model m [--domains wiki2s,ptbs,c4s] [--tasks]
+//! drank serve    --model m [--ratio 0.3] [--requests 200] [--clients 4]
+//! drank info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use drank::calib::CalibOpts;
+use drank::compress::{pipeline, CompressOpts, Method};
+use drank::coordinator::{Server, ServerOpts};
+use drank::data::synlang::Domain;
+use drank::data::DataBundle;
+use drank::eval;
+use drank::model::{ckpt_path, logical_model, Weights};
+use drank::report::{fmt_acc, fmt_ppl, Table};
+use drank::runtime::trainer::{self, TrainOpts};
+use drank::runtime::Engine;
+use drank::util::cli::Args;
+use drank::util::json::Json;
+use drank::util::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!("usage: drank <train|compress|eval|serve|info> [--flags]");
+            Ok(())
+        }
+    }
+}
+
+/// Load a trained checkpoint for a logical model (or fail with guidance).
+fn load_ckpt(model: &str) -> Result<Weights> {
+    let path = ckpt_path(model);
+    let (w, step) = Weights::load(&path)
+        .with_context(|| format!("no checkpoint for '{model}' — run `drank train --model {model}` first"))?;
+    eprintln!("loaded {path} (step {step})");
+    Ok(w)
+}
+
+fn bundle_for(w: &Weights, scale: f64) -> DataBundle {
+    DataBundle::build_cached(w.config.vocab, 1234, scale)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "m");
+    let (cfg, seed) = logical_model(&model)?;
+    let engine = Engine::open("artifacts")?;
+    let data = DataBundle::build_cached(cfg.vocab, 1234, args.f64_or("scale", 1.0));
+    let weights = Weights::init(cfg, seed);
+    let opts = TrainOpts {
+        steps: args.usize_or("steps", 400),
+        base_lr: args.f64_or("lr", 3e-3),
+        warmup: args.usize_or("warmup", 20),
+        log_every: args.usize_or("log-every", 20),
+        seed,
+    };
+    println!(
+        "training {model} (config {}, {} params) for {} steps",
+        cfg.name,
+        weights.total_params(),
+        opts.steps
+    );
+    let timer = Timer::start();
+    let log = trainer::train(&engine, weights, &data, &opts)?;
+    for (step, loss) in &log.losses {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!(
+        "done in {:.1}s ({:.0} tokens/sec)",
+        timer.secs(),
+        log.tokens_per_sec
+    );
+    let path = ckpt_path(&model);
+    log.final_weights.save(&path, opts.steps)?;
+    // persist the loss curve for EXPERIMENTS.md §E2E
+    let curve = Json::Arr(
+        log.losses
+            .iter()
+            .map(|(s, l)| Json::arr_num(&[*s as f64, *l]))
+            .collect(),
+    );
+    std::fs::create_dir_all(format!("runs/{model}"))?;
+    std::fs::write(
+        format!("runs/{model}/train_log.json"),
+        Json::obj(vec![
+            ("model", Json::str(model.clone())),
+            ("steps", Json::num(opts.steps as f64)),
+            ("tokens_per_sec", Json::num(log.tokens_per_sec)),
+            ("curve", curve),
+        ])
+        .emit(),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}
+
+fn parse_compress_opts(args: &Args) -> Result<CompressOpts> {
+    Ok(CompressOpts {
+        method: Method::parse(&args.str_or("method", "drank"))?,
+        ratio: args.f64_or("ratio", 0.2),
+        group_layers: args.usize_or("group", 2),
+        beta: args.f64_or("beta", 0.3),
+        asvd_alpha: args.f64_or("alpha", 0.5),
+        gqa_policy: !args.has("no-gqa-policy"),
+        compensate: args.has("compensate"),
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "m");
+    let weights = load_ckpt(&model)?;
+    let engine = Engine::open("artifacts")?;
+    let data = bundle_for(&weights, 1.0);
+    let opts = parse_compress_opts(args)?;
+    let copts = CalibOpts {
+        domain: Domain::parse(&args.str_or("calib", "wiki2s"))
+            .ok_or_else(|| anyhow::anyhow!("bad --calib"))?,
+        batches: args.usize_or("calib-batches", 16),
+        seed: args.u64_or("calib-seed", 13),
+        fisher: opts.method == Method::Fwsvd,
+    };
+    println!(
+        "compressing {model} with {} at ratio {:.0}% (n={}, beta={})",
+        opts.method.name(),
+        opts.ratio * 100.0,
+        opts.group_layers,
+        opts.beta
+    );
+    let timer = Timer::start();
+    let (compressed, plan) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
+    println!(
+        "achieved ratio {:.3} in {:.1}s",
+        compressed.achieved_ratio(),
+        timer.secs()
+    );
+    for (typ, ks) in &plan {
+        println!("  {typ:<8} ranks {ks:?}");
+    }
+    if args.has("eval") {
+        let stream = &data.domain(Domain::Wiki2s).test;
+        let ppl = eval::ppl_compressed(&engine, &compressed, stream, args.usize_or("eval-batches", 24))?;
+        println!("wiki2s test PPL: {}", fmt_ppl(ppl));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "m");
+    let weights = load_ckpt(&model)?;
+    let engine = Engine::open("artifacts")?;
+    let data = bundle_for(&weights, 1.0);
+    let max_b = args.usize_or("eval-batches", 24);
+
+    let mut table = Table::new(
+        &format!("eval {model}"),
+        &["Dataset", "PPL"],
+    );
+    for name in args.list_or("domains", "wiki2s,ptbs,c4s") {
+        let d = Domain::parse(&name).ok_or_else(|| anyhow::anyhow!("bad domain {name}"))?;
+        let ppl = eval::ppl_dense(&engine, &weights, &data.domain(d).test, max_b)?;
+        table.row(vec![name, fmt_ppl(ppl)]);
+    }
+    print!("{}", table.markdown());
+
+    if args.has("tasks") {
+        let n = args.usize_or("task-items", 100);
+        let (accs, avg) = eval::tasks::run_all_suites(
+            &engine,
+            &weights,
+            &data.tokenizer,
+            &data.lexicon,
+            n,
+            args.u64_or("task-seed", 17),
+        )?;
+        let mut t = Table::new("zero-shot", &["Suite", "Acc", "Chance"]);
+        for (suite, acc) in accs {
+            t.row(vec![
+                suite.name().to_string(),
+                fmt_acc(acc),
+                fmt_acc(eval::tasks::chance(suite)),
+            ]);
+        }
+        t.row(vec!["Average*".into(), fmt_acc(avg), "-".into()]);
+        print!("{}", t.markdown());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "m");
+    let weights = load_ckpt(&model)?;
+    let cfg = weights.config;
+    let data = bundle_for(&weights, 1.0);
+    let ratio = args.f64_or("ratio", 0.0);
+    let n_requests = args.usize_or("requests", 200);
+    let n_clients = args.usize_or("clients", 4);
+
+    // optionally compress before serving
+    let served = if ratio > 0.0 {
+        let engine = Engine::open("artifacts")?;
+        let opts = parse_compress_opts(args)?;
+        let copts = CalibOpts::default();
+        let (m, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &CompressOpts { ratio, ..opts })?;
+        println!("serving compressed model (ratio {:.2})", m.achieved_ratio());
+        m
+    } else {
+        drank::model::lowrank::CompressedModel::dense_passthrough(weights)
+    };
+
+    let server = Server::spawn(
+        move || {
+            let rt = drank::runtime::Runtime::cpu()?;
+            drank::graph::compile_forward(&rt, &served, cfg.batch, cfg.seq)
+        },
+        ServerOpts::default(),
+    );
+    // drive load from client threads
+    let stream = data.domain(Domain::Wiki2s).test.clone();
+    let per_client = n_requests / n_clients;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = server.client();
+        let stream = stream.clone();
+        let seq = cfg.seq;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = drank::util::rng::Rng::new(c as u64);
+            for _ in 0..per_client {
+                let start = rng.below(stream.len() - seq);
+                let toks = stream[start..start + seq].to_vec();
+                client.score(toks).expect("score");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.shutdown()?;
+    println!(
+        "served {} requests, {:.0} tokens/s, p50 {:.1} ms, p99 {:.1} ms, batch occupancy {:.2}",
+        m.requests,
+        m.throughput_tps(),
+        m.p50_ms(),
+        m.p99_ms(),
+        m.mean_batch_occupancy()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::open("artifacts")?;
+    println!("pjrt platform: {}", engine.rt.platform());
+    for cfg in drank::model::CONFIGS {
+        let w = Weights::init(cfg, 0);
+        println!(
+            "config {:<5} d={} L={} H={}/{} dff={} vocab={} params={}",
+            cfg.name, cfg.d, cfg.layers, cfg.heads, cfg.kv_heads, cfg.dff, cfg.vocab,
+            w.total_params()
+        );
+    }
+    for m in ["tiny", "s", "m", "m2", "l", "gqa", "mist"] {
+        let have = std::path::Path::new(&ckpt_path(m)).exists();
+        println!("model {m:<5} checkpoint: {}", if have { "yes" } else { "no" });
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn unused(_: &str) -> Result<()> {
+    bail!("unreachable")
+}

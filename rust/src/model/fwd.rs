@@ -1,0 +1,300 @@
+//! Pure-Rust reference forward pass (test oracle).
+//!
+//! A direct, loop-level port of `python/compile/model.py` used to
+//! cross-check the AOT artifacts and the runtime-built XLA graphs at tiny
+//! sizes. Single-threaded f32; not a performance path.
+
+use super::Weights;
+
+const EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 1e4;
+
+/// Per-token NLL for a [batch, seq] token matrix; returns [batch, seq-1].
+pub fn nll(w: &Weights, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
+    let cfg = w.config;
+    let t = seq - 1;
+    let hidden = forward_hidden(w, tokens, batch, seq, t);
+    // logits + per-position cross entropy
+    let lm = w.by_name("lm_head");
+    let (d, v) = (cfg.d, cfg.vocab);
+    let mut out = vec![0.0f32; batch * t];
+    let mut logits = vec![0.0f32; v];
+    for b in 0..batch {
+        for pos in 0..t {
+            let h = &hidden[(b * t + pos) * d..(b * t + pos + 1) * d];
+            for x in logits.iter_mut() {
+                *x = 0.0;
+            }
+            for (i, &hv) in h.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let row = &lm.data[i * v..(i + 1) * v];
+                for j in 0..v {
+                    logits[j] += hv * row[j];
+                }
+            }
+            let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let logz = max + logits.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+            let target = tokens[b * seq + pos + 1] as usize;
+            out[b * t + pos] = logz - logits[target];
+        }
+    }
+    out
+}
+
+/// Final normed hidden states for inputs tokens[:, :t]; [batch*t*d].
+pub fn forward_hidden(
+    w: &Weights,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    t: usize,
+) -> Vec<f32> {
+    let cfg = w.config;
+    let d = cfg.d;
+    let embed = w.by_name("embed");
+    let mut x = vec![0.0f32; batch * t * d];
+    for b in 0..batch {
+        for pos in 0..t {
+            let tok = tokens[b * seq + pos] as usize;
+            x[(b * t + pos) * d..(b * t + pos + 1) * d]
+                .copy_from_slice(&embed.data[tok * d..(tok + 1) * d]);
+        }
+    }
+    let (cos, sin) = rope_tables(t, cfg.head_dim());
+    for l in 0..cfg.layers {
+        attention_block(w, &mut x, batch, t, l, &cos, &sin);
+        mlp_block(w, &mut x, batch, t, l);
+    }
+    // final rmsnorm
+    let fnorm = &w.by_name("final_norm").data;
+    for row in x.chunks_exact_mut(d) {
+        rmsnorm_inplace(row, fnorm);
+    }
+    x
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+fn rmsnorm_inplace(x: &mut [f32], w: &[f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + EPS).sqrt();
+    for i in 0..x.len() {
+        x[i] *= inv * w[i];
+    }
+}
+
+fn rope_tables(t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = hd / 2;
+    let mut cos = vec![0.0f32; t * half];
+    let mut sin = vec![0.0f32; t * half];
+    for p in 0..t {
+        for i in 0..half {
+            let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+            let ang = p as f32 * freq;
+            cos[p * half + i] = ang.cos();
+            sin[p * half + i] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// rotate-half rope on one head vector at position p.
+fn apply_rope(v: &mut [f32], p: usize, cos: &[f32], sin: &[f32]) {
+    let half = v.len() / 2;
+    for i in 0..half {
+        let c = cos[p * half + i];
+        let s = sin[p * half + i];
+        let x1 = v[i];
+        let x2 = v[half + i];
+        v[i] = x1 * c - x2 * s;
+        v[half + i] = x2 * c + x1 * s;
+    }
+}
+
+/// y[j] += x · W[:, j] for row-major W (d_in × d_out).
+fn matvec_add(x: &[f32], w: &[f32], d_out: usize, y: &mut [f32]) {
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += xv * row[j];
+        }
+    }
+}
+
+fn attention_block(
+    w: &Weights,
+    x: &mut [f32],
+    batch: usize,
+    t: usize,
+    l: usize,
+    cos: &[f32],
+    sin: &[f32],
+) {
+    let cfg = w.config;
+    let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
+    let kvd = cfg.kvd();
+    let an = &w.by_name("attn_norm").data[l * d..(l + 1) * d];
+    let wq = &w.by_name("wq").data[l * d * d..(l + 1) * d * d];
+    let wk = &w.by_name("wk").data[l * d * kvd..(l + 1) * d * kvd];
+    let wv = &w.by_name("wv").data[l * d * kvd..(l + 1) * d * kvd];
+    let wo = &w.by_name("wo").data[l * d * d..(l + 1) * d * d];
+    let rep = h / kvh;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut xn = vec![0.0f32; d];
+    for b in 0..batch {
+        // project the whole sequence first
+        let mut q = vec![0.0f32; t * d];
+        let mut k = vec![0.0f32; t * kvd];
+        let mut v = vec![0.0f32; t * kvd];
+        for pos in 0..t {
+            let row = &x[(b * t + pos) * d..(b * t + pos + 1) * d];
+            rmsnorm(row, an, &mut xn);
+            matvec_add(&xn, wq, d, &mut q[pos * d..(pos + 1) * d]);
+            matvec_add(&xn, wk, kvd, &mut k[pos * kvd..(pos + 1) * kvd]);
+            matvec_add(&xn, wv, kvd, &mut v[pos * kvd..(pos + 1) * kvd]);
+            for head in 0..h {
+                apply_rope(&mut q[pos * d + head * hd..pos * d + (head + 1) * hd], pos, cos, sin);
+            }
+            for head in 0..kvh {
+                apply_rope(
+                    &mut k[pos * kvd + head * hd..pos * kvd + (head + 1) * hd],
+                    pos,
+                    cos,
+                    sin,
+                );
+            }
+        }
+        // causal attention, head by head
+        let mut attn = vec![0.0f32; t * d];
+        let mut scores = vec![0.0f32; t];
+        for head in 0..h {
+            let kv_head = head / rep;
+            for pos in 0..t {
+                let qv = &q[pos * d + head * hd..pos * d + (head + 1) * hd];
+                let mut max = f32::MIN;
+                for j in 0..=pos {
+                    let kv = &k[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                    let s: f32 = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    scores[j] = s;
+                    max = max.max(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores[..=pos].iter_mut() {
+                    *s = (*s - max).exp();
+                    denom += *s;
+                }
+                let out = &mut attn[pos * d + head * hd..pos * d + (head + 1) * hd];
+                for j in 0..=pos {
+                    let p = scores[j] / denom;
+                    let vv = &v[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                    for i in 0..hd {
+                        out[i] += p * vv[i];
+                    }
+                }
+            }
+        }
+        // output projection + residual
+        for pos in 0..t {
+            let row = &mut x[(b * t + pos) * d..(b * t + pos + 1) * d];
+            let mut o = vec![0.0f32; d];
+            matvec_add(&attn[pos * d..(pos + 1) * d], wo, d, &mut o);
+            for i in 0..d {
+                row[i] += o[i];
+            }
+        }
+    }
+}
+
+fn mlp_block(w: &Weights, x: &mut [f32], batch: usize, t: usize, l: usize) {
+    let cfg = w.config;
+    let (d, dff) = (cfg.d, cfg.dff);
+    let mn = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
+    let wg = &w.by_name("w_gate").data[l * d * dff..(l + 1) * d * dff];
+    let wu = &w.by_name("w_up").data[l * d * dff..(l + 1) * d * dff];
+    let wd = &w.by_name("w_down").data[l * dff * d..(l + 1) * dff * d];
+    let mut xn = vec![0.0f32; d];
+    let mut g = vec![0.0f32; dff];
+    let mut u = vec![0.0f32; dff];
+    for bt in 0..batch * t {
+        let row = &mut x[bt * d..(bt + 1) * d];
+        rmsnorm(row, mn, &mut xn);
+        g.iter_mut().for_each(|x| *x = 0.0);
+        u.iter_mut().for_each(|x| *x = 0.0);
+        matvec_add(&xn, wg, dff, &mut g);
+        matvec_add(&xn, wu, dff, &mut u);
+        for i in 0..dff {
+            // silu(g) * u
+            let s = g[i] / (1.0 + (-g[i]).exp());
+            g[i] = s * u[i];
+        }
+        let mut o = vec![0.0f32; d];
+        matvec_add(&g, wd, d, &mut o);
+        for i in 0..d {
+            row[i] += o[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Weights};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Weights, Vec<i32>, usize, usize) {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 3);
+        let mut r = Rng::new(5);
+        let (b, s) = (cfg.batch, cfg.seq);
+        let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+        (w, toks, b, s)
+    }
+
+    #[test]
+    fn nll_near_uniform_for_random_model() {
+        let (w, toks, b, s) = setup();
+        let out = nll(&w, &toks, b, s);
+        assert_eq!(out.len(), b * (s - 1));
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        let want = (w.config.vocab as f32).ln();
+        assert!((mean - want).abs() < 1.0, "mean {mean} vs ln(V) {want}");
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_matter() {
+        let (w, mut toks, b, s) = setup();
+        let a = nll(&w, &toks, b, s);
+        // change the last token; all positions except the final prediction
+        // target must be unaffected
+        toks[s - 1] = (toks[s - 1] + 1).rem_euclid(w.config.vocab as i32);
+        let c = nll(&w, &toks, b, s);
+        let t = s - 1;
+        for pos in 0..t - 1 {
+            assert!((a[pos] - c[pos]).abs() < 1e-5, "pos {pos}");
+        }
+        assert!((a[t - 1] - c[t - 1]).abs() > 1e-7); // target changed
+    }
+
+    #[test]
+    fn gqa_runs_and_is_finite() {
+        let cfg = ModelConfig::by_name("gqa").unwrap();
+        let w = Weights::init(cfg, 4);
+        let mut r = Rng::new(6);
+        let (b, s) = (1, 16);
+        let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+        let out = nll(&w, &toks, b, s);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,203 @@
+//! Compressed model representation: per-type dense or factored weights.
+//!
+//! A factored type stores per *group* a shared basis B (d1×k_g) and
+//! per-layer coefficients C⁽ⁱ⁾ (k_g×d2) — the Basis-Sharing layout the
+//! paper builds on (n=1 groups degenerate to plain SVD-LLM factors).
+//!
+//! Two execution paths consume this:
+//!  - `to_dense()` reconstructs W ≈ B·C per layer and reuses the AOT dense
+//!    artifact (bit-accurate PPL/zero-shot evaluation, no recompilation);
+//!  - `graph::build_compressed` emits the *factored* matmuls with the exact
+//!    allocated ranks for the runtime throughput path.
+
+use std::collections::BTreeMap;
+
+use super::{ModelConfig, Weights, COMPRESSIBLE};
+use crate::tensor::{matmul::matmul_f32, Mat32};
+
+/// Shared-basis factors for one group of consecutive layers.
+#[derive(Clone, Debug)]
+pub struct GroupFactors {
+    pub start_layer: usize,
+    /// shared basis, d1 × k
+    pub b: Mat32,
+    /// per-layer coefficients, each k × d2 (len == group size n)
+    pub cs: Vec<Mat32>,
+}
+
+impl GroupFactors {
+    pub fn rank(&self) -> usize {
+        self.b.cols
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cs.len()
+    }
+
+    /// Parameters stored: shared basis once + every coefficient block.
+    pub fn param_count(&self) -> usize {
+        self.b.rows * self.b.cols
+            + self.cs.iter().map(|c| c.rows * c.cols).sum::<usize>()
+    }
+}
+
+/// Representation of one weight type across all layers.
+#[derive(Clone, Debug)]
+pub enum TypeRep {
+    /// kept dense (rank allocation decided compression isn't worth it)
+    Dense,
+    Factored(Vec<GroupFactors>),
+}
+
+/// A compressed model: original weights + per-type factored replacements.
+#[derive(Clone)]
+pub struct CompressedModel {
+    pub base: Weights,
+    pub reps: BTreeMap<String, TypeRep>,
+}
+
+impl CompressedModel {
+    pub fn dense_passthrough(base: Weights) -> Self {
+        let reps = COMPRESSIBLE
+            .iter()
+            .map(|t| (t.to_string(), TypeRep::Dense))
+            .collect();
+        Self { base, reps }
+    }
+
+    pub fn config(&self) -> ModelConfig {
+        self.base.config
+    }
+
+    /// Factors of (type, layer) if that type is factored.
+    pub fn layer_factors(&self, typ: &str, layer: usize) -> Option<(&Mat32, &Mat32)> {
+        match self.reps.get(typ)? {
+            TypeRep::Dense => None,
+            TypeRep::Factored(groups) => {
+                for g in groups {
+                    if layer >= g.start_layer && layer < g.start_layer + g.n_layers() {
+                        return Some((&g.b, &g.cs[layer - g.start_layer]));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Parameter count across the compressible weight types.
+    pub fn compressible_param_count(&self) -> usize {
+        let cfg = self.config();
+        COMPRESSIBLE
+            .iter()
+            .map(|t| match &self.reps[*t] {
+                TypeRep::Dense => {
+                    let (d1, d2) = cfg.matrix_dims(t);
+                    cfg.layers * d1 * d2
+                }
+                TypeRep::Factored(groups) => {
+                    groups.iter().map(|g| g.param_count()).sum()
+                }
+            })
+            .sum()
+    }
+
+    /// Achieved compression ratio over the compressible weights
+    /// (1 − compressed/dense; the paper's θ convention).
+    pub fn achieved_ratio(&self) -> f64 {
+        let dense = self.config().compressible_params() as f64;
+        1.0 - self.compressible_param_count() as f64 / dense
+    }
+
+    /// Reconstruct per-layer dense weights W ≈ B·C (for the AOT eval path).
+    pub fn to_dense(&self) -> Weights {
+        let mut w = self.base.clone();
+        let cfg = self.config();
+        for typ in COMPRESSIBLE {
+            if let TypeRep::Factored(groups) = &self.reps[typ] {
+                let pidx = ModelConfig::param_index(typ);
+                for g in groups {
+                    for (i, c) in g.cs.iter().enumerate() {
+                        let rec = matmul_f32(&g.b, c);
+                        w.tensors[pidx].set_layer_mat(g.start_layer + i, &rec);
+                    }
+                }
+                let _ = cfg;
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_model() -> CompressedModel {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        CompressedModel::dense_passthrough(Weights::init(cfg, 1))
+    }
+
+    #[test]
+    fn passthrough_has_zero_ratio() {
+        let m = tiny_model();
+        assert_eq!(m.achieved_ratio(), 0.0);
+        assert_eq!(
+            m.compressible_param_count(),
+            m.config().compressible_params()
+        );
+    }
+
+    #[test]
+    fn factored_reduces_params_and_reconstructs() {
+        let mut m = tiny_model();
+        let cfg = m.config();
+        let (d1, d2) = cfg.matrix_dims("wq");
+        let k = 4usize;
+        // factor both layers as one group with an exact rank-k B·C
+        let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| (i % 7) as f32 * 0.1).collect());
+        let cs: Vec<Mat32> = (0..cfg.layers)
+            .map(|l| {
+                Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i + l) % 5) as f32 * 0.1).collect())
+            })
+            .collect();
+        m.reps.insert(
+            "wq".into(),
+            TypeRep::Factored(vec![GroupFactors { start_layer: 0, b: b.clone(), cs: cs.clone() }]),
+        );
+        assert!(m.achieved_ratio() > 0.0);
+        let dense = m.to_dense();
+        let w0 = dense.by_name("wq").layer_mat(0);
+        let want = matmul_f32(&b, &cs[0]);
+        assert_eq!(w0.data, want.data);
+        // shared basis counted once
+        let expect = d1 * k + cfg.layers * k * d2;
+        let dense_count = cfg.layers * d1 * d2;
+        let total: usize = m.compressible_param_count();
+        assert_eq!(
+            total,
+            cfg.compressible_params() - dense_count + expect
+        );
+    }
+
+    #[test]
+    fn layer_factors_lookup() {
+        let mut m = tiny_model();
+        let cfg = m.config();
+        let (d1, d2) = cfg.matrix_dims("wv");
+        let g0 = GroupFactors {
+            start_layer: 0,
+            b: Mat32::zeros(d1, 3),
+            cs: vec![Mat32::zeros(3, d2)],
+        };
+        let g1 = GroupFactors {
+            start_layer: 1,
+            b: Mat32::zeros(d1, 5),
+            cs: vec![Mat32::zeros(5, d2)],
+        };
+        m.reps.insert("wv".into(), TypeRep::Factored(vec![g0, g1]));
+        assert_eq!(m.layer_factors("wv", 0).unwrap().0.cols, 3);
+        assert_eq!(m.layer_factors("wv", 1).unwrap().0.cols, 5);
+        assert!(m.layer_factors("wq", 0).is_none());
+    }
+}

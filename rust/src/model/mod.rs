@@ -1,0 +1,372 @@
+//! tinylm model zoo: configs, weights, checkpoints, reference forward.
+//!
+//! Shape configs mirror `python/compile/model.py::CONFIGS` exactly (the
+//! manifest is cross-checked at load time). *Logical* models map the
+//! paper's LLM families onto shape configs + training seeds/corpora:
+//!
+//! | paper model   | logical | shape config | notes                        |
+//! |---------------|---------|--------------|------------------------------|
+//! | LLaMA-7B      | `m`     | m            | main workhorse               |
+//! | LLaMA-2-7B    | `m2`    | m            | different seed + corpus mix  |
+//! | LLaMA-13B     | `l`     | l            | scale axis                   |
+//! | LLaMA-30B     | —       | l            | (folded into `l`)            |
+//! | LLaMA-3-8B    | `gqa`   | gqa          | grouped-query attention      |
+//! | Mistral-7B    | `mist`  | mist         | GQA, wider MLP               |
+
+pub mod fwd;
+pub mod lowrank;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Canonical parameter names, in artifact wire order.
+pub const PARAM_NAMES: [&str; 12] = [
+    "embed", "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate",
+    "w_up", "w_down", "final_norm", "lm_head",
+];
+
+/// Compressible weight types (paper's 7), canonical order.
+pub const COMPRESSIBLE: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Shape configuration of a tinylm variant (mirrors python Config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub dff: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+pub const CONFIGS: [ModelConfig; 6] = [
+    ModelConfig { name: "tiny", vocab: 256, d: 64, layers: 2, heads: 4, kv_heads: 4, dff: 176, seq: 64, batch: 2 },
+    ModelConfig { name: "s", vocab: 512, d: 64, layers: 4, heads: 4, kv_heads: 4, dff: 176, seq: 96, batch: 4 },
+    ModelConfig { name: "m", vocab: 512, d: 96, layers: 6, heads: 6, kv_heads: 6, dff: 256, seq: 96, batch: 4 },
+    ModelConfig { name: "l", vocab: 512, d: 128, layers: 8, heads: 8, kv_heads: 8, dff: 344, seq: 96, batch: 4 },
+    ModelConfig { name: "gqa", vocab: 512, d: 96, layers: 6, heads: 6, kv_heads: 2, dff: 256, seq: 96, batch: 4 },
+    ModelConfig { name: "mist", vocab: 512, d: 96, layers: 6, heads: 6, kv_heads: 3, dff: 288, seq: 96, batch: 4 },
+];
+
+impl ModelConfig {
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        CONFIGS
+            .iter()
+            .find(|c| c.name == name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown config {name}"))
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    pub fn kvd(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    pub fn is_gqa(&self) -> bool {
+        self.kv_heads < self.heads
+    }
+
+    /// Parameter shapes in canonical order.
+    pub fn param_shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
+        let (l, d, dff, v, kvd) = (self.layers, self.d, self.dff, self.vocab, self.kvd());
+        vec![
+            ("embed", vec![v, d]),
+            ("attn_norm", vec![l, d]),
+            ("wq", vec![l, d, d]),
+            ("wk", vec![l, d, kvd]),
+            ("wv", vec![l, d, kvd]),
+            ("wo", vec![l, d, d]),
+            ("mlp_norm", vec![l, d]),
+            ("w_gate", vec![l, d, dff]),
+            ("w_up", vec![l, d, dff]),
+            ("w_down", vec![l, dff, d]),
+            ("final_norm", vec![d]),
+            ("lm_head", vec![d, v]),
+        ]
+    }
+
+    /// (d1, d2) of one layer's matrix of a compressible type
+    /// (row-vector convention, y = x·W, d1 = input dim).
+    pub fn matrix_dims(&self, typ: &str) -> (usize, usize) {
+        let (d, dff, kvd) = (self.d, self.dff, self.kvd());
+        match typ {
+            "wq" => (d, d),
+            "wk" => (d, kvd),
+            "wv" => (d, kvd),
+            "wo" => (d, d),
+            "w_gate" => (d, dff),
+            "w_up" => (d, dff),
+            "w_down" => (dff, d),
+            _ => panic!("not compressible: {typ}"),
+        }
+    }
+
+    /// Break-even rank of a type: above this, factors cost more than dense.
+    pub fn kmax(&self, typ: &str) -> usize {
+        let (d1, d2) = self.matrix_dims(typ);
+        (d1 * d2) / (d1 + d2)
+    }
+
+    /// Index of a compressible type in the canonical param list.
+    pub fn param_index(typ: &str) -> usize {
+        match typ {
+            "wq" => 2,
+            "wk" => 3,
+            "wv" => 4,
+            "wo" => 5,
+            "w_gate" => 7,
+            "w_up" => 8,
+            "w_down" => 9,
+            _ => panic!("not compressible: {typ}"),
+        }
+    }
+
+    /// Total parameters across all compressible matrices.
+    pub fn compressible_params(&self) -> usize {
+        COMPRESSIBLE
+            .iter()
+            .map(|t| {
+                let (d1, d2) = self.matrix_dims(t);
+                self.layers * d1 * d2
+            })
+            .sum()
+    }
+}
+
+/// A named tensor (flat f32, row-major).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// View layer `l` of a stacked [L, r, c] tensor as a Mat32 copy.
+    pub fn layer_mat(&self, l: usize) -> crate::tensor::Mat32 {
+        assert_eq!(self.shape.len(), 3);
+        let (r, c) = (self.shape[1], self.shape[2]);
+        let off = l * r * c;
+        crate::tensor::Mat32::from_vec(r, c, self.data[off..off + r * c].to_vec())
+    }
+
+    /// Overwrite layer `l` of a stacked [L, r, c] tensor.
+    pub fn set_layer_mat(&mut self, l: usize, m: &crate::tensor::Mat32) {
+        assert_eq!(self.shape.len(), 3);
+        let (r, c) = (self.shape[1], self.shape[2]);
+        assert_eq!((m.rows, m.cols), (r, c));
+        let off = l * r * c;
+        self.data[off..off + r * c].copy_from_slice(&m.data);
+    }
+}
+
+/// Dense model weights (canonical order).
+#[derive(Clone)]
+pub struct Weights {
+    pub config: ModelConfig,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Weights {
+    /// Normal(0, 0.02) init, norms at 1.
+    pub fn init(config: ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tensors = config
+            .param_shapes()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.contains("norm") {
+                    vec![1.0f32; n]
+                } else {
+                    (0..n).map(|_| 0.02 * rng.normal() as f32).collect()
+                };
+                Tensor { shape, data }
+            })
+            .collect();
+        Self { config, tensors }
+    }
+
+    pub fn by_name(&self, name: &str) -> &Tensor {
+        let idx = PARAM_NAMES.iter().position(|&n| n == name).unwrap();
+        &self.tensors[idx]
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    // ---- checkpoint format: "TLMW1" + u32 header len + json + raw f32 LE --
+
+    pub fn save(&self, path: &str, step: usize) -> Result<()> {
+        let header = Json::obj(vec![
+            ("config", Json::str(self.config.name)),
+            ("step", Json::num(step as f64)),
+            (
+                "shapes",
+                Json::Arr(
+                    self.tensors
+                        .iter()
+                        .map(|t| Json::arr_num(&t.shape.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+                        .collect(),
+                ),
+            ),
+        ])
+        .emit();
+        let mut out = Vec::with_capacity(self.total_params() * 4 + header.len() + 16);
+        out.extend_from_slice(b"TLMW1");
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for t in &self.tensors {
+            for &x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<(Self, usize)> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        if raw.len() < 9 || &raw[..5] != b"TLMW1" {
+            bail!("{path}: not a TLMW1 checkpoint");
+        }
+        let hlen = u32::from_le_bytes(raw[5..9].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&raw[9..9 + hlen])?;
+        let j = Json::parse(header).map_err(|e| anyhow!("{path}: {e}"))?;
+        let config = ModelConfig::by_name(
+            j.get("config").and_then(|c| c.as_str()).unwrap_or(""),
+        )?;
+        let step = j.get("step").and_then(|s| s.as_usize()).unwrap_or(0);
+        let mut tensors = Vec::new();
+        let mut off = 9 + hlen;
+        for (_, shape) in config.param_shapes() {
+            let n: usize = shape.iter().product();
+            if off + n * 4 > raw.len() {
+                bail!("{path}: truncated checkpoint");
+            }
+            let data: Vec<f32> = raw[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            off += n * 4;
+            tensors.push(Tensor { shape, data });
+        }
+        Ok((Self { config, tensors }, step))
+    }
+}
+
+/// Logical models: paper family -> (shape config, train seed, corpus seed).
+pub fn logical_model(name: &str) -> Result<(ModelConfig, u64)> {
+    let (cfg, seed) = match name {
+        "tiny" => ("tiny", 100),
+        "s" => ("s", 101),
+        "m" => ("m", 102),      // LLaMA-7B analog
+        "m2" => ("m", 202),     // LLaMA-2-7B analog: same shapes, new seed
+        "l" => ("l", 103),      // LLaMA-13B analog
+        "gqa" => ("gqa", 104),  // LLaMA-3-8B analog
+        "mist" => ("mist", 105),// Mistral-7B analog
+        _ => bail!("unknown logical model {name}"),
+    };
+    Ok((ModelConfig::by_name(cfg)?, seed))
+}
+
+/// Default checkpoint path for a logical model.
+pub fn ckpt_path(model: &str) -> String {
+    format!("runs/{model}/model.bin")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_match_python() {
+        let m = ModelConfig::by_name("m").unwrap();
+        assert_eq!((m.d, m.layers, m.dff, m.vocab), (96, 6, 256, 512));
+        let g = ModelConfig::by_name("gqa").unwrap();
+        assert!(g.is_gqa());
+        assert_eq!(g.kvd(), 32); // slimmed kv: 2 heads * 16
+        assert_eq!(g.matrix_dims("wk"), (96, 32));
+    }
+
+    #[test]
+    fn kmax_is_break_even() {
+        let m = ModelConfig::by_name("m").unwrap();
+        let k = m.kmax("wq");
+        let (d1, d2) = m.matrix_dims("wq");
+        assert!(k * (d1 + d2) <= d1 * d2);
+        assert!((k + 1) * (d1 + d2) > d1 * d2);
+    }
+
+    #[test]
+    fn init_statistics() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 0);
+        let wq = &w.tensors[2];
+        let mean: f32 = wq.data.iter().sum::<f32>() / wq.numel() as f32;
+        let var: f32 =
+            wq.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / wq.numel() as f32;
+        assert!(mean.abs() < 2e-3);
+        assert!((var.sqrt() - 0.02).abs() < 2e-3);
+        // norms are ones
+        assert!(w.by_name("attn_norm").data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 7);
+        let path = "/tmp/drank_test_ckpt.bin";
+        w.save(path, 123).unwrap();
+        let (w2, step) = Weights::load(path).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(w2.config.name, "tiny");
+        for (a, b) in w.tensors.iter().zip(&w2.tensors) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn layer_mat_roundtrip() {
+        let mut t = Tensor::zeros(vec![2, 3, 4]);
+        let m = crate::tensor::Mat32::from_vec(3, 4, (0..12).map(|x| x as f32).collect());
+        t.set_layer_mat(1, &m);
+        assert_eq!(t.layer_mat(1).data, m.data);
+        assert!(t.layer_mat(0).data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn logical_models_resolve() {
+        for name in ["tiny", "s", "m", "m2", "l", "gqa", "mist"] {
+            logical_model(name).unwrap();
+        }
+        assert!(logical_model("nope").is_err());
+        // m and m2 share shapes but differ in seed
+        let (c1, s1) = logical_model("m").unwrap();
+        let (c2, s2) = logical_model("m2").unwrap();
+        assert_eq!(c1.name, c2.name);
+        assert_ne!(s1, s2);
+    }
+}

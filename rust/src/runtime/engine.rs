@@ -1,0 +1,159 @@
+//! Artifact registry + executable cache.
+//!
+//! Reads `artifacts/manifest.json` (written by `python -m compile.aot`),
+//! validates Rust-side shape configs against the manifest, and lazily
+//! compiles artifacts on first use. Compiled executables are cached for
+//! the process lifetime — the serving/eval/training hot loops never touch
+//! the HLO parser again.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{lit_f32, Runtime};
+use crate::model::{ModelConfig, Weights};
+use crate::util::json::Json;
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub config: String,
+    pub kind: String,
+    pub inputs: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<(String, Vec<usize>, String)>,
+}
+
+fn parse_io(j: &Json) -> Option<Vec<(String, Vec<usize>, String)>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Some((
+                e.get("name")?.as_str()?.to_string(),
+                e.get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Option<Vec<_>>>()?,
+                e.get("dtype")?.as_str()?.to_string(),
+            ))
+        })
+        .collect()
+}
+
+/// Runtime engine: PJRT client + manifest + compile cache.
+pub struct Engine {
+    pub rt: Runtime,
+    pub dir: String,
+    specs: BTreeMap<(String, String), ArtifactSpec>,
+    cache: RefCell<BTreeMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: &str) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let mtext = std::fs::read_to_string(format!("{dir}/manifest.json"))
+            .with_context(|| format!("reading {dir}/manifest.json — run `make artifacts`"))?;
+        let j = Json::parse(&mtext).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut specs = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let spec = ArtifactSpec {
+                file: a.get("file").and_then(|x| x.as_str()).unwrap_or("").into(),
+                config: a.get("config").and_then(|x| x.as_str()).unwrap_or("").into(),
+                kind: a.get("kind").and_then(|x| x.as_str()).unwrap_or("").into(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(parse_io)
+                    .ok_or_else(|| anyhow!("bad inputs"))?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(parse_io)
+                    .ok_or_else(|| anyhow!("bad outputs"))?,
+            };
+            specs.insert((spec.config.clone(), spec.kind.clone()), spec);
+        }
+        Ok(Self { rt, dir: dir.into(), specs, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn spec(&self, config: &str, kind: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(&(config.to_string(), kind.to_string()))
+            .ok_or_else(|| anyhow!("no artifact for ({config}, {kind}) in manifest"))
+    }
+
+    pub fn has(&self, config: &str, kind: &str) -> bool {
+        self.specs.contains_key(&(config.to_string(), kind.to_string()))
+    }
+
+    /// Compile (or fetch cached) executable for (config, kind).
+    pub fn executable(
+        &self,
+        config: &str,
+        kind: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = (config.to_string(), kind.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(config, kind)?;
+        let path = format!("{}/{}", self.dir, spec.file);
+        let exe = std::rc::Rc::new(self.rt.load_hlo_text(&path)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    /// Accepts owned or borrowed literals (callers cache weight literals).
+    pub fn exec<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        config: &str,
+        kind: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.spec(config, kind)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "({config}, {kind}): expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(config, kind)?;
+        let result = exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Validate that a Rust-side config matches the manifest shapes.
+    pub fn check_config(&self, cfg: &ModelConfig) -> Result<()> {
+        let spec = self.spec(cfg.name, "dense_nll")?;
+        let want = cfg.param_shapes();
+        for ((name, shape), (mname, mshape, _)) in want.iter().zip(&spec.inputs) {
+            if name != mname || shape != mshape {
+                bail!(
+                    "config {} drifted from manifest: {name}{shape:?} vs {mname}{mshape:?} — \
+                     re-run `make artifacts`",
+                    cfg.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Weights as input literals (canonical order).
+    pub fn weight_literals(&self, w: &Weights) -> Result<Vec<xla::Literal>> {
+        w.tensors.iter().map(|t| lit_f32(&t.data, &t.shape)).collect()
+    }
+}
+
+/// Convert an f32 output literal back to a flat vec + shape.
+pub fn tensor_of(lit: &xla::Literal) -> Result<(Vec<f32>, Vec<usize>)> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok((lit.to_vec::<f32>()?, dims))
+}

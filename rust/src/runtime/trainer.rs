@@ -1,0 +1,117 @@
+//! Training loop: drive the AOT `train_step` artifact from Rust.
+//!
+//! The whole step (fwd + bwd + Adam) is one XLA computation; Rust owns the
+//! schedule (linear warmup → cosine decay), data order, logging, and
+//! checkpointing. This is the "train a small transformer and log the loss
+//! curve" leg of the end-to-end validation (EXPERIMENTS.md §E2E).
+
+use anyhow::Result;
+
+use super::engine::{tensor_of, Engine};
+use super::{lit_f32, lit_i32, lit_scalar};
+use crate::data::{Batcher, DataBundle};
+use crate::model::{Tensor, Weights};
+use crate::util::Timer;
+
+/// Training hyperparameters (Adam moments/clipping live inside the artifact).
+pub struct TrainOpts {
+    pub steps: usize,
+    pub base_lr: f64,
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self { steps: 400, base_lr: 3e-3, warmup: 20, log_every: 20, seed: 0 }
+    }
+}
+
+/// Cosine schedule with linear warmup.
+pub fn lr_at(opts: &TrainOpts, step: usize) -> f64 {
+    if step < opts.warmup {
+        return opts.base_lr * (step + 1) as f64 / opts.warmup as f64;
+    }
+    let t = (step - opts.warmup) as f64 / (opts.steps - opts.warmup).max(1) as f64;
+    opts.base_lr * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()).max(0.02)
+}
+
+/// Result of a training run.
+pub struct TrainLog {
+    pub losses: Vec<(usize, f64)>,
+    pub final_weights: Weights,
+    pub tokens_per_sec: f64,
+}
+
+/// Train `weights` in place on the wiki2s stream of `data`.
+pub fn train(
+    engine: &Engine,
+    mut weights: Weights,
+    data: &DataBundle,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    let cfg = weights.config;
+    engine.check_config(&cfg)?;
+    let stream = &data.domain(crate::data::synlang::Domain::Wiki2s).train;
+    let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed ^ 0xBA7C4);
+
+    // adam state starts at zero
+    let mut m: Vec<Tensor> = weights.tensors.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
+    let mut v: Vec<Tensor> = weights.tensors.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
+
+    let mut losses = Vec::new();
+    let timer = Timer::start();
+    let tokens_per_step = (cfg.batch * cfg.seq) as f64;
+    for step in 0..opts.steps {
+        let batch = batcher.next_batch();
+        let mut inputs = Vec::with_capacity(39);
+        for t in &weights.tensors {
+            inputs.push(lit_f32(&t.data, &t.shape)?);
+        }
+        for t in &m {
+            inputs.push(lit_f32(&t.data, &t.shape)?);
+        }
+        for t in &v {
+            inputs.push(lit_f32(&t.data, &t.shape)?);
+        }
+        inputs.push(lit_scalar((step + 1) as f32));
+        inputs.push(lit_scalar(lr_at(opts, step) as f32));
+        inputs.push(lit_i32(&batch, &[cfg.batch, cfg.seq])?);
+
+        let outs = engine.exec(cfg.name, "train_step", &inputs)?;
+        let loss = outs[0].to_vec::<f32>()?[0] as f64;
+        let n = weights.tensors.len();
+        for i in 0..n {
+            weights.tensors[i].data = tensor_of(&outs[1 + i])?.0;
+            m[i].data = tensor_of(&outs[1 + n + i])?.0;
+            v[i].data = tensor_of(&outs[1 + 2 * n + i])?.0;
+        }
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            losses.push((step, loss));
+        }
+        if !loss.is_finite() {
+            anyhow::bail!("loss diverged at step {step}");
+        }
+    }
+    let secs = timer.secs();
+    Ok(TrainLog {
+        losses,
+        final_weights: weights,
+        tokens_per_sec: tokens_per_step * opts.steps as f64 / secs.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shape() {
+        let opts = TrainOpts { steps: 100, base_lr: 1e-2, warmup: 10, ..Default::default() };
+        assert!(lr_at(&opts, 0) < lr_at(&opts, 9)); // warmup rising
+        assert!((lr_at(&opts, 10) - 1e-2).abs() < 1e-3); // peak after warmup
+        assert!(lr_at(&opts, 99) < lr_at(&opts, 50)); // decaying
+        assert!(lr_at(&opts, 99) > 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Blocked matrix multiplication.
+//!
+//! The pipeline's own GEMM (used by whitening / SVD reconstruction — the
+//! model hot path runs in XLA). i-k-j loop order with 64x64x64 blocking:
+//! the inner j-loop is a contiguous FMA over both B and C rows, which the
+//! compiler auto-vectorizes. See EXPERIMENTS.md §Perf for measurements.
+
+use super::{Mat32, MatF};
+
+const BLOCK: usize = 64;
+
+/// C = A * B, f64.
+pub fn matmul_f64(a: &MatF, b: &MatF) -> MatF {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A * B, f32 (weight reconstruction W = B·C on the compression path).
+pub fn matmul_f32(a: &Mat32, b: &Mat32) -> Mat32 {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat32::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// y = x * A for a single row-vector x (serving-side helper).
+pub fn vecmat_f32(x: &[f32], a: &Mat32) -> Vec<f32> {
+    assert_eq!(x.len(), a.rows);
+    let mut y = vec![0.0f32; a.cols];
+    for (k, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let arow = a.row(k);
+        for j in 0..a.cols {
+            y[j] += xv * arow[j];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &MatF, b: &MatF) -> MatF {
+        let mut c = MatF::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> MatF {
+        MatF::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn blocked_matches_naive_over_shapes() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 130, 33), (128, 17, 96)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let got = matmul_f64(&a, &b);
+            let want = naive(&a, &b);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-9, "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 33, 47);
+        let b = random(&mut rng, 47, 29);
+        let got = matmul_f32(&a.to_f32(), &b.to_f32());
+        let want = matmul_f64(&a, &b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((*x as f64 - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 20, 30).to_f32();
+        let x: Vec<f32> = (0..20).map(|_| rng.normal() as f32).collect();
+        let xm = Mat32::from_vec(1, 20, x.clone());
+        let want = matmul_f32(&xm, &a);
+        let got = vecmat_f32(&x, &a);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Dense row-major matrix/tensor substrate.
+//!
+//! The compression pipeline (whitening, SVD, allocation) runs on `Mat<f64>`
+//! for precision — the paper keeps the whitening matrix S in FP64 — while
+//! model weights travel as `Mat<f32>`/flat `Vec<f32>`. Only what the
+//! pipeline needs is implemented; heavy inference math lives in XLA.
+
+pub mod matmul;
+
+use std::fmt;
+
+/// Row-major 2-D matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+pub type MatF = Mat<f64>;
+pub type Mat32 = Mat<f32>;
+
+impl<T: Copy + Default> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation [A | B | ...] (Basis-Sharing grouping).
+    pub fn hcat(mats: &[&Mat<T>]) -> Self {
+        assert!(!mats.is_empty());
+        let rows = mats[0].rows;
+        assert!(mats.iter().all(|m| m.rows == rows), "row mismatch in hcat");
+        let cols: usize = mats.iter().map(|m| m.cols).sum();
+        let mut out = Self::zeros(rows, cols);
+        for r in 0..rows {
+            let mut off = 0;
+            for m in mats {
+                out.row_mut(r)[off..off + m.cols].copy_from_slice(m.row(r));
+                off += m.cols;
+            }
+        }
+        out
+    }
+
+    /// Split into equal column blocks (inverse of hcat for equal widths).
+    pub fn hsplit(&self, n: usize) -> Vec<Mat<T>> {
+        assert_eq!(self.cols % n, 0, "cols not divisible");
+        let w = self.cols / n;
+        (0..n)
+            .map(|i| {
+                let mut b = Mat::zeros(self.rows, w);
+                for r in 0..self.rows {
+                    b.row_mut(r).copy_from_slice(&self.row(r)[i * w..(i + 1) * w]);
+                }
+                b
+            })
+            .collect()
+    }
+}
+
+impl MatF {
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_f32(m: &Mat32) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Mat32 {
+        Mat32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// C = A * B (blocked f64 matmul; see tensor::matmul).
+    pub fn matmul(&self, b: &MatF) -> MatF {
+        matmul::matmul_f64(self, b)
+    }
+
+    /// C = A^T * B without materializing A^T.
+    pub fn t_matmul(&self, b: &MatF) -> MatF {
+        assert_eq!(self.rows, b.rows);
+        let mut out = MatF::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for i in 0..self.cols {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for j in 0..b.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &MatF) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &MatF) -> MatF {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        MatF {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Scale row r by s (diagonal left-multiplication building block).
+    pub fn scale_row(&mut self, r: usize, s: f64) {
+        for x in self.row_mut(r) {
+            *x *= s;
+        }
+    }
+}
+
+impl<T: fmt::Debug + Copy + Default> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, v: &[f64]) -> MatF {
+        MatF::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = mat(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn hcat_hsplit_roundtrip() {
+        let a = mat(2, 2, &[1., 2., 3., 4.]);
+        let b = mat(2, 2, &[5., 6., 7., 8.]);
+        let cat = MatF::hcat(&[&a, &b]);
+        assert_eq!(cat.cols, 4);
+        assert_eq!(cat.row(0), &[1., 2., 5., 6.]);
+        let parts = cat.hsplit(2);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let a = mat(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let b = mat(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let a = mat(2, 2, &[1., 2., 3., 4.]);
+        let i = MatF::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn frob_norm() {
+        let a = mat(1, 2, &[3., 4.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,285 @@
+//! Byte-pair-encoding tokenizer (train / encode / decode / save / load).
+//!
+//! The corpus substrate emits text; the models consume token ids. Classic
+//! word-bounded BPE: pre-tokenize on whitespace (a leading space is part of
+//! the following word, GPT-2 style), then greedily merge the most frequent
+//! adjacent pair until the target vocab size. Merges never cross word
+//! boundaries, so encoding is word-local and cacheable.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Trained BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// token id -> surface string
+    pub vocab: Vec<String>,
+    /// (left id, right id) -> (merged id, rank); lower rank merges first
+    merges: BTreeMap<(u32, u32), (u32, u32)>,
+    /// byte -> base token id
+    byte_ids: BTreeMap<u8, u32>,
+}
+
+impl Tokenizer {
+    /// Train on `text` to a vocabulary of `vocab_size` tokens.
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        // base alphabet = bytes present in the corpus
+        let mut byte_ids = BTreeMap::new();
+        let mut vocab = Vec::new();
+        for &b in text.as_bytes() {
+            byte_ids.entry(b).or_insert_with(|| {
+                vocab.push((b as char).to_string());
+                (vocab.len() - 1) as u32
+            });
+        }
+        assert!(
+            vocab_size >= vocab.len(),
+            "vocab_size {} below alphabet {}",
+            vocab_size,
+            vocab.len()
+        );
+
+        // unique words with counts (leading space kept with the word)
+        let mut word_counts: BTreeMap<Vec<u32>, usize> = BTreeMap::new();
+        for word in split_words(text) {
+            let ids: Vec<u32> = word.bytes().map(|b| byte_ids[&b]).collect();
+            *word_counts.entry(ids).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<u32>, usize)> = word_counts.into_iter().collect();
+
+        let mut merges = BTreeMap::new();
+        let mut rank = 0u32;
+        while vocab.len() < vocab_size {
+            // count adjacent pairs
+            let mut pair_counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for (w, c) in &words {
+                for p in w.windows(2) {
+                    *pair_counts.entry((p[0], p[1])).or_insert(0) += c;
+                }
+            }
+            // deterministic argmax: highest count, ties by smallest pair
+            let Some((&pair, &count)) = pair_counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = vocab.len() as u32;
+            let surface =
+                format!("{}{}", vocab[pair.0 as usize], vocab[pair.1 as usize]);
+            vocab.push(surface);
+            merges.insert(pair, (new_id, rank));
+            rank += 1;
+            // apply merge to every word
+            for (w, _) in &mut words {
+                *w = apply_merge(w, pair, new_id);
+            }
+        }
+        Self { vocab, merges, byte_ids }
+    }
+
+    /// Encode text into token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for word in split_words(text) {
+            let mut ids: Vec<u32> = word
+                .bytes()
+                .filter_map(|b| self.byte_ids.get(&b).copied())
+                .collect();
+            // repeatedly apply the lowest-rank applicable merge
+            loop {
+                let mut best: Option<(usize, (u32, u32), u32)> = None; // (pos, rank+id)
+                for (i, p) in ids.windows(2).enumerate() {
+                    if let Some(&(id, r)) = self.merges.get(&(p[0], p[1])) {
+                        if best.map(|(_, (_, br), _)| r < br).unwrap_or(true) {
+                            best = Some((i, (id, r), id));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, _, id)) => {
+                        ids[i] = id;
+                        ids.remove(i + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    /// Decode token ids back to text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.vocab.get(i as usize).map(|s| s.as_str()).unwrap_or(""))
+            .collect()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let merges: Vec<Json> = self
+            .merges
+            .iter()
+            .map(|(&(a, b), &(id, r))| {
+                Json::arr_num(&[a as f64, b as f64, id as f64, r as f64])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "vocab",
+                Json::Arr(self.vocab.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            ("merges", Json::Arr(merges)),
+            (
+                "bytes",
+                Json::Arr(
+                    self.byte_ids
+                        .iter()
+                        .map(|(&b, &id)| Json::arr_num(&[b as f64, id as f64]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let vocab = j
+            .get("vocab")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()?;
+        let mut merges = BTreeMap::new();
+        for m in j.get("merges")?.as_arr()? {
+            let a = m.as_arr()?;
+            merges.insert(
+                (a[0].as_usize()? as u32, a[1].as_usize()? as u32),
+                (a[2].as_usize()? as u32, a[3].as_usize()? as u32),
+            );
+        }
+        let mut byte_ids = BTreeMap::new();
+        for m in j.get("bytes")?.as_arr()? {
+            let a = m.as_arr()?;
+            byte_ids.insert(a[0].as_usize()? as u8, a[1].as_usize()? as u32);
+        }
+        Some(Self { vocab, merges, byte_ids })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().emit())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j).ok_or_else(|| anyhow::anyhow!("bad tokenizer json"))
+    }
+}
+
+/// Split into words, each keeping its leading space: "a bc d" -> ["a", " bc", " d"].
+fn split_words(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut start = 0;
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b' ' && i > start {
+            out.push(&text[start..i]);
+            start = i;
+        }
+        i += 1;
+    }
+    if start < bytes.len() {
+        out.push(&text[start..]);
+    }
+    out
+}
+
+fn apply_merge(w: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(w.len());
+    let mut i = 0;
+    while i < w.len() {
+        if i + 1 < w.len() && w[i] == pair.0 && w[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(w[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat the cat ran to the cat house \
+                          a cat and a mat and the house on the mat";
+
+    #[test]
+    fn roundtrip_exact() {
+        let tok = Tokenizer::train(CORPUS, 64);
+        let ids = tok.encode(CORPUS);
+        assert_eq!(tok.decode(&ids), CORPUS);
+    }
+
+    #[test]
+    fn compresses_frequent_words() {
+        let tok = Tokenizer::train(CORPUS, 64);
+        let ids = tok.encode(" the cat");
+        // " the" and " cat" are the most frequent words; both should be
+        // single tokens (or near), so <= 4 tokens for 8 chars
+        assert!(ids.len() <= 4, "{ids:?}");
+    }
+
+    #[test]
+    fn unseen_text_still_roundtrips() {
+        let tok = Tokenizer::train(CORPUS, 48);
+        let text = " tame cats chant"; // unseen words, seen alphabet
+        let ids = tok.encode(text);
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let tok = Tokenizer::train(CORPUS, 40);
+        assert!(tok.vocab_size() <= 40);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let tok = Tokenizer::train(CORPUS, 64);
+        let j = tok.to_json();
+        let tok2 = Tokenizer::from_json(&j).unwrap();
+        let text = " the cat sat";
+        assert_eq!(tok.encode(text), tok2.encode(text));
+        assert_eq!(tok2.decode(&tok2.encode(text)), text);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(CORPUS, 64);
+        let b = Tokenizer::train(CORPUS, 64);
+        assert_eq!(a.vocab, b.vocab);
+    }
+
+    #[test]
+    fn encoding_never_crosses_words() {
+        let tok = Tokenizer::train(CORPUS, 64);
+        let a = tok.encode(" the");
+        let b = tok.encode(" cat");
+        let ab = tok.encode(" the cat");
+        assert_eq!(ab, [a, b].concat());
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("train --model m --steps=400 --verbose --lr 0.003 out.bin");
+        assert_eq!(a.positional, vec!["train", "out.bin"]);
+        assert_eq!(a.get("model"), Some("m"));
+        assert_eq!(a.usize_or("steps", 0), 400);
+        assert!(a.has("verbose"));
+        assert_eq!(a.f64_or("lr", 0.0), 0.003);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_values() {
+        let a = parse("--ratios 0.2,0.3,0.4");
+        assert_eq!(a.list_or("ratios", ""), vec!["0.2", "0.3", "0.4"]);
+        assert_eq!(a.list_or("other", "x,y"), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--flag --key value");
+        assert!(a.has("flag"));
+        assert_eq!(a.get("key"), Some("value"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Cross-layer integration tests.
+//!
+//! The same model semantics are implemented three times (JAX → AOT HLO
+//! artifact, pure-Rust reference, runtime XlaBuilder graph); these tests
+//! pin all three to each other, then exercise the full compression →
+//! evaluation pipeline end to end on the tiny config.
+
+use drank::calib::{CalibOpts, CalibStats};
+use drank::compress::{methods, CompressOpts, Method};
+use drank::data::DataBundle;
+use drank::graph;
+use drank::model::{fwd, ModelConfig, Weights};
+use drank::runtime::{lit_i32, Engine};
+use drank::util::rng::Rng;
+
+fn tiny_setup() -> (ModelConfig, Weights, Vec<i32>) {
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, 42);
+    let mut r = Rng::new(7);
+    let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|_| r.below(cfg.vocab) as i32)
+        .collect();
+    (cfg, w, toks)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn artifact_matches_pure_rust_forward() {
+    let (cfg, w, toks) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    engine.check_config(&cfg).unwrap();
+    let mut inputs = engine.weight_literals(&w).unwrap();
+    inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
+    let artifact_nll = outs[0].to_vec::<f32>().unwrap();
+
+    let rust_nll = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    assert_eq!(artifact_nll.len(), rust_nll.len());
+    let d = max_abs_diff(&artifact_nll, &rust_nll);
+    assert!(d < 2e-3, "artifact vs rust fwd: max diff {d}");
+}
+
+#[test]
+fn runtime_graph_matches_artifact() {
+    let (cfg, w, toks) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let mut inputs = engine.weight_literals(&w).unwrap();
+    inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
+    let artifact_nll = outs[0].to_vec::<f32>().unwrap();
+
+    let compiled = graph::compile_dense(&engine.rt, &w, cfg.batch, cfg.seq).unwrap();
+    let graph_nll = compiled.nll(&toks).unwrap();
+    let d = max_abs_diff(&artifact_nll, &graph_nll);
+    assert!(d < 2e-3, "graph vs artifact: max diff {d}");
+}
+
+#[test]
+fn compressed_graph_matches_reconstructed_dense() {
+    // factored execution (x·B·C) must equal executing the reconstruction
+    let (cfg, w, toks) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let stats = CalibStats::synthetic(&cfg, 5);
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.3,
+        group_layers: 2,
+        ..Default::default()
+    };
+    let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+    assert!(model.achieved_ratio() > 0.25);
+
+    let compiled = graph::compile_forward(&engine.rt, &model, cfg.batch, cfg.seq).unwrap();
+    let factored_nll = compiled.nll(&toks).unwrap();
+
+    let dense = model.to_dense();
+    let mut inputs = engine.weight_literals(&dense).unwrap();
+    inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
+    let dense_nll = outs[0].to_vec::<f32>().unwrap();
+
+    let d = max_abs_diff(&factored_nll, &dense_nll);
+    assert!(d < 5e-3, "factored vs reconstructed: max diff {d}");
+}
+
+#[test]
+fn gqa_graph_matches_pure_rust() {
+    let cfg = ModelConfig::by_name("gqa").unwrap();
+    let w = Weights::init(cfg, 9);
+    let mut r = Rng::new(8);
+    let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|_| r.below(cfg.vocab) as i32)
+        .collect();
+    let engine = Engine::open("artifacts").unwrap();
+    let compiled = graph::compile_dense(&engine.rt, &w, cfg.batch, cfg.seq).unwrap();
+    let graph_nll = compiled.nll(&toks).unwrap();
+    let rust_nll = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    let d = max_abs_diff(&graph_nll, &rust_nll);
+    assert!(d < 2e-3, "gqa graph vs rust: max diff {d}");
+}
+
+#[test]
+fn calibration_gram_is_symmetric_psd() {
+    let (cfg, w, _) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let data = DataBundle::build(cfg.vocab, 3, 0.02);
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    let stats = drank::calib::run(&engine, &w, &data, &copts).unwrap();
+    let g = stats.gram("wq", 0);
+    assert_eq!(g.rows, cfg.d);
+    for i in 0..cfg.d {
+        for j in 0..cfg.d {
+            assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-4);
+        }
+    }
+    let diag_mean: f64 = (0..cfg.d).map(|i| g.at(i, i)).sum::<f64>() / cfg.d as f64;
+    assert!(diag_mean > 0.0);
+    // fisher off by default
+    assert!(stats.fisher_rows("wq", 0).is_none());
+}
+
+#[test]
+fn coordinator_serves_correct_nll() {
+    // server responses must match a direct artifact evaluation
+    let (cfg, w, toks) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let mut inputs = engine.weight_literals(&w).unwrap();
+    inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
+    let want = outs[0].to_vec::<f32>().unwrap();
+    drop(engine);
+
+    let w2 = w.clone();
+    let server = drank::coordinator::Server::spawn(
+        move || {
+            let rt = drank::runtime::Runtime::cpu()?;
+            graph::compile_dense(&rt, &w2, cfg.batch, cfg.seq)
+        },
+        drank::coordinator::ServerOpts::default(),
+    );
+    // submit each row as a separate request from separate threads
+    let mut handles = Vec::new();
+    for r in 0..cfg.batch {
+        let client = server.client();
+        let row: Vec<u32> = toks[r * cfg.seq..(r + 1) * cfg.seq]
+            .iter()
+            .map(|&t| t as u32)
+            .collect();
+        handles.push(std::thread::spawn(move || client.score(row).unwrap()));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (r, resp) in responses.iter().enumerate() {
+        assert_eq!(resp.nll.len(), cfg.seq - 1);
+        let row_want = &want[r * (cfg.seq - 1)..(r + 1) * (cfg.seq - 1)];
+        let d = max_abs_diff(&resp.nll, row_want);
+        assert!(d < 2e-3, "row {r}: server vs artifact diff {d}");
+        assert!(resp.latency_ms >= 0.0);
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, cfg.batch);
+    assert!(metrics.batches >= 1 && metrics.batches <= cfg.batch);
+}
+
+#[test]
+fn lowrank_artifact_matches_dense_reconstruction() {
+    // the Pallas lowrank kernel path (padded factors) == dense execution
+    let (cfg, w, toks) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    if !engine.has(cfg.name, "lowrank_nll") {
+        return;
+    }
+    let stats = CalibStats::synthetic(&cfg, 6);
+    let opts = CompressOpts { method: Method::SvdLlm, ratio: 0.3, ..Default::default() };
+    let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+
+    // padded factored execution via the AOT artifact (pallas kernel inside)
+    let spec = engine.spec(cfg.name, "lowrank_nll").unwrap().clone();
+    let lp = drank::lora::padded_params_for_tests(&model).unwrap();
+    let mut inputs: Vec<xla::Literal> = lp
+        .iter()
+        .map(|t| drank::runtime::lit_f32(&t.data, &t.shape).unwrap())
+        .collect();
+    assert_eq!(inputs.len() + 1, spec.inputs.len());
+    inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let outs = engine.exec(cfg.name, "lowrank_nll", &inputs).unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+
+    let dense = model.to_dense();
+    let mut din = engine.weight_literals(&dense).unwrap();
+    din.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
+    let want = engine.exec(cfg.name, "dense_nll", &din).unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 5e-3, "lowrank artifact vs dense: {d}");
+}
+
+#[test]
+fn sequential_compensation_pipeline_runs() {
+    // §4.1 path: blocks compressed front-to-back with recalibration against
+    // the compressed prefix; must hit the target ratio and stay finite
+    let (cfg, w, _) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let data = DataBundle::build_cached(cfg.vocab, 1234, 1.0);
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    // n=1 so the tiny 2-layer model has two compensation blocks (with n=2
+    // the whole model is one block and compensation degenerates to a no-op)
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.4,
+        group_layers: 1,
+        compensate: true,
+        ..Default::default()
+    };
+    let (model, plan) = drank::compress::pipeline::compress_model(
+        &engine, &w, &data, &copts, &opts,
+    )
+    .unwrap();
+    assert!((model.achieved_ratio() - 0.4).abs() < 0.06, "{}", model.achieved_ratio());
+    assert_eq!(plan.len(), 7);
+    // still evaluable
+    let stream = &data.domain(drank::data::synlang::Domain::Wiki2s).test;
+    let ppl = drank::eval::ppl_compressed(&engine, &model, stream, 4).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0, "{ppl}");
+    // compensated result differs from uncompensated (recalibration happened)
+    let opts2 = CompressOpts { compensate: false, ..opts };
+    let (model2, _) = drank::compress::pipeline::compress_model(
+        &engine, &w, &data, &copts, &opts2,
+    )
+    .unwrap();
+    let a = model.to_dense();
+    let b2 = model2.to_dense();
+    let d = max_abs_diff(
+        &a.by_name("wq").layer_mat(cfg.layers - 1).data,
+        &b2.by_name("wq").layer_mat(cfg.layers - 1).data,
+    );
+    assert!(d > 0.0, "compensation had no effect on the last layer");
+}
+
+#[test]
+fn zero_shot_scoring_end_to_end_tiny() {
+    // full task pipeline on a briefly-trained tiny model: accuracy must be
+    // a valid probability and the easy suite must beat chance
+    let engine = Engine::open("artifacts").unwrap();
+    let data = DataBundle::build_cached(256, 1234, 1.0);
+    let opts = drank::runtime::trainer::TrainOpts { steps: 60, ..Default::default() };
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let log =
+        drank::runtime::trainer::train(&engine, Weights::init(cfg, 3), &data, &opts).unwrap();
+    let (accs, avg) = drank::eval::tasks::run_all_suites(
+        &engine,
+        &log.final_weights,
+        &data.tokenizer,
+        &data.lexicon,
+        30,
+        11,
+    )
+    .unwrap();
+    assert_eq!(accs.len(), 7);
+    for (suite, acc) in &accs {
+        assert!((0.0..=1.0).contains(acc), "{suite:?} {acc}");
+    }
+    assert!(avg > 0.0 && avg < 1.0);
+}
+
+#[test]
+fn train_step_reduces_loss_tiny() {
+    let (cfg, w, _) = tiny_setup();
+    let engine = Engine::open("artifacts").unwrap();
+    let data = DataBundle::build(cfg.vocab, 4, 0.02);
+    let opts = drank::runtime::trainer::TrainOpts {
+        steps: 12,
+        base_lr: 3e-3,
+        warmup: 2,
+        log_every: 1,
+        seed: 1,
+    };
+    let log = drank::runtime::trainer::train(&engine, w, &data, &opts).unwrap();
+    let first = log.losses.first().unwrap().1;
+    let last = log.losses.last().unwrap().1;
+    assert!(
+        last < first - 0.2,
+        "training did not reduce loss: {first} -> {last}"
+    );
+    assert!(log.tokens_per_sec > 0.0);
+}

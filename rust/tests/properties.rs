@@ -1,0 +1,215 @@
+//! Randomized property tests (proptest is unavailable offline; this is a
+//! seed-sweep harness over the same invariants a proptest suite would
+//! check — every case prints its seed on failure for reproduction).
+
+use drank::compress::alloc::{beta_rebalance, lagrange_alloc, uniform_rank, GroupSpec};
+use drank::compress::layer_groups;
+use drank::linalg::svd::svd;
+use drank::linalg::{cholesky_jitter, effective_rank, solve_lower, solve_lower_t};
+use drank::tensor::MatF;
+use drank::tokenizer::Tokenizer;
+use drank::util::json::Json;
+use drank::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+fn randm(rng: &mut Rng, r: usize, c: usize) -> MatF {
+    MatF::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn prop_lagrange_alloc_invariants() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(seed);
+        let g = 1 + r.below(12);
+        let specs: Vec<GroupSpec> = (0..g)
+            .map(|_| GroupSpec {
+                reff: 0.5 + r.uniform() * 1000.0,
+                omega: 16 + r.below(512),
+                kmax: 4 + r.below(256),
+            })
+            .collect();
+        let max_spend: usize = specs.iter().map(|s| s.kmax * s.omega).sum();
+        let budget = (0.1 + 0.8 * r.uniform()) * max_spend as f64;
+        let ks = lagrange_alloc(&specs, budget);
+        assert_eq!(ks.len(), g, "seed {seed}");
+        let spent: usize = ks.iter().zip(&specs).map(|(&k, s)| k * s.omega).sum();
+        for (k, s) in ks.iter().zip(&specs) {
+            assert!(*k >= 1 && *k <= s.kmax, "seed {seed}: k {k} kmax {}", s.kmax);
+        }
+        // budget respected unless the 1-rank floor alone exceeds it
+        let floor: usize = specs.iter().map(|s| s.omega).sum();
+        if floor as f64 <= budget {
+            assert!(spent as f64 <= budget + 1e-6, "seed {seed}: {spent} > {budget}");
+        }
+        // permutation equivariance
+        let mut perm: Vec<usize> = (0..g).collect();
+        r.shuffle(&mut perm);
+        let specs_p: Vec<GroupSpec> = perm.iter().map(|&i| specs[i].clone()).collect();
+        let ks_p = lagrange_alloc(&specs_p, budget);
+        for (pi, &i) in perm.iter().enumerate() {
+            assert_eq!(ks_p[pi], ks[i], "seed {seed}: not permutation-equivariant");
+        }
+    }
+}
+
+#[test]
+fn prop_beta_rebalance_never_inflates_params() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(1000 + seed);
+        let g = 1 + r.below(8);
+        let kq: Vec<usize> = (0..g).map(|_| 2 + r.below(200)).collect();
+        let kk: Vec<usize> = (0..g).map(|_| 2 + r.below(200)).collect();
+        let kv: Vec<usize> = (0..g).map(|_| 2 + r.below(200)).collect();
+        let (oq, ok, ov) = (32 + r.below(512), 32 + r.below(512), 32 + r.below(512));
+        let kmax = vec![10_000usize; g];
+        let beta = r.uniform() * 0.9;
+        let (q2, k2, v2) = beta_rebalance(beta, &kq, &kk, &kv, oq, ok, ov, &kmax);
+        let before: usize = kq.iter().map(|k| k * oq).sum::<usize>()
+            + kk.iter().map(|k| k * ok).sum::<usize>()
+            + kv.iter().map(|k| k * ov).sum::<usize>();
+        let after: usize = q2.iter().map(|k| k * oq).sum::<usize>()
+            + k2.iter().map(|k| k * ok).sum::<usize>()
+            + v2.iter().map(|k| k * ov).sum::<usize>();
+        assert!(after <= before, "seed {seed}: {after} > {before}");
+        // V never loses, Q/K never gain
+        assert!(v2.iter().zip(&kv).all(|(a, b)| a >= b), "seed {seed}");
+        assert!(q2.iter().zip(&kq).all(|(a, b)| a <= b), "seed {seed}");
+        assert!(k2.iter().zip(&kk).all(|(a, b)| a <= b), "seed {seed}");
+        // everyone keeps at least rank 1
+        assert!(q2.iter().all(|&k| k >= 1), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_uniform_rank_achieves_ratio() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(2000 + seed);
+        let d1 = 16 + r.below(512);
+        let d2 = 16 + r.below(512);
+        let n = 1 + r.below(5);
+        let ratio = 0.1 + 0.7 * r.uniform();
+        let k = uniform_rank(d1, d2, n, ratio);
+        let params = k * (d1 + n * d2);
+        let dense = n * d1 * d2;
+        // achieved ratio >= target (floor), within one rank-unit of target
+        assert!(params <= dense, "seed {seed}");
+        let achieved = 1.0 - params as f64 / dense as f64;
+        assert!(achieved + ((d1 + n * d2) as f64 / dense as f64) >= ratio - 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_effective_rank_bounds() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(3000 + seed);
+        let n = 1 + r.below(100);
+        let sigma: Vec<f64> = (0..n).map(|_| r.uniform() * 10.0 + 1e-6).collect();
+        let reff = effective_rank(&sigma);
+        assert!(reff >= 1.0 - 1e-9, "seed {seed}: {reff}");
+        assert!(reff <= n as f64 + 1e-9, "seed {seed}: {reff} > {n}");
+        // scale invariance
+        let scaled: Vec<f64> = sigma.iter().map(|s| s * 7.3).collect();
+        assert!((effective_rank(&scaled) - reff).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_svd_reconstruction_and_eckart_young() {
+    for seed in 0..10 {
+        let mut r = Rng::new(4000 + seed);
+        let m = 2 + r.below(40);
+        let n = 2 + r.below(40);
+        let a = randm(&mut r, m, n);
+        let d = svd(&a);
+        let full = d.reconstruct(m.min(n));
+        assert!(full.sub(&a).frob_norm() / a.frob_norm() < 1e-8, "seed {seed}");
+        let k = 1 + r.below(m.min(n));
+        let err = d.reconstruct(k).sub(&a).frob_norm();
+        let tail: f64 = d.s[k..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!((err - tail).abs() < 1e-7, "seed {seed}: {err} vs {tail}");
+    }
+}
+
+#[test]
+fn prop_cholesky_solve_roundtrip() {
+    for seed in 0..10 {
+        let mut r = Rng::new(5000 + seed);
+        let n = 2 + r.below(40);
+        let x = randm(&mut r, n + 8, n);
+        let mut g = x.t_matmul(&x);
+        g.scale(1.0 / (n + 8) as f64);
+        let (l, _) = cholesky_jitter(&g);
+        let b = randm(&mut r, n, 3);
+        let y = solve_lower(&l, &b);
+        let rec = l.matmul(&y);
+        assert!(rec.sub(&b).frob_norm() < 1e-7, "seed {seed}");
+        let z = solve_lower_t(&l, &b);
+        let rec2 = l.transpose().matmul(&z);
+        assert!(rec2.sub(&b).frob_norm() < 1e-7, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_layer_groups_partition() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(6000 + seed);
+        let layers = 1 + r.below(32);
+        let n = 1 + r.below(8);
+        let groups = layer_groups(layers, n);
+        let mut covered = vec![false; layers];
+        for (start, len) in groups {
+            assert!(len >= 1 && len <= n, "seed {seed}");
+            for l in start..start + len {
+                assert!(!covered[l], "seed {seed}: overlap at {l}");
+                covered[l] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "seed {seed}: gap");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.uniform() < 0.5),
+            2 => Json::Num((r.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = r.below(8);
+                Json::Str((0..n).map(|_| "ab\"\\\nxyz é".chars().nth(r.below(9)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..r.below(4)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..CASES {
+        let mut r = Rng::new(7000 + seed);
+        let v = random_json(&mut r, 3);
+        let text = v.emit();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_tokenizer_roundtrips_synlang() {
+    let lex = drank::data::synlang::Lexicon::new();
+    for seed in 0..6 {
+        let mut g = drank::data::synlang::Generator::new(
+            &lex,
+            drank::data::synlang::Domain::C4s,
+            seed,
+        );
+        let corpus = g.corpus(30_000);
+        let tok = Tokenizer::train(&corpus, 200 + (seed as usize) * 50);
+        let sample = g.corpus(2_000);
+        let ids = tok.encode(&sample);
+        assert_eq!(tok.decode(&ids), sample, "seed {seed}");
+    }
+}
