@@ -1,19 +1,23 @@
-//! Serving demo: dynamic-batched scoring server, dense vs compressed.
+//! Serving demo: multi-worker dynamic-batched scoring, dense vs compressed.
 //!
 //!   cargo run --release --example serve_throughput -- [--model m]
-//!       [--ratio 0.4] [--requests 120] [--clients 4]
+//!       [--ratio 0.4] [--requests 120] [--clients 4] [--workers 1]
+//!       [--backend xla|ref]
 //!
 //! Mirrors the paper's Figure 4 setting: the compressed model's factored
 //! matmuls do less work per token, so served throughput rises with the
-//! compression ratio.
+//! compression ratio — and with `--workers N` the coordinator scales the
+//! same workload across N backend instances. `--backend ref` runs the
+//! pure-Rust reference forward end to end (random-init weights if no
+//! checkpoint exists), so a bare checkout can drive the full stack.
 
 use drank::calib::CalibOpts;
 use drank::compress::{pipeline, CompressOpts, Method};
-use drank::coordinator::{Server, ServerOpts};
+use drank::coordinator::{spawn_model_server, ServerOpts};
 use drank::data::synlang::Domain;
 use drank::data::DataBundle;
+use drank::model::load_or_init;
 use drank::model::lowrank::CompressedModel;
-use drank::model::{ckpt_path, Weights};
 use drank::runtime::Engine;
 use drank::util::cli::Args;
 use drank::util::rng::Rng;
@@ -23,15 +27,12 @@ fn run_load(
     stream: Vec<u32>,
     requests: usize,
     clients: usize,
+    workers: usize,
+    backend: &str,
 ) -> anyhow::Result<drank::coordinator::Metrics> {
     let cfg = model.config();
-    let server = Server::spawn(
-        move || {
-            let rt = drank::runtime::Runtime::cpu()?;
-            drank::graph::compile_forward(&rt, &model, cfg.batch, cfg.seq)
-        },
-        ServerOpts::default(),
-    );
+    let sopts = ServerOpts { workers, ..Default::default() };
+    let server = spawn_model_server(model, cfg.batch, cfg.seq, backend, sopts)?;
     let mut handles = Vec::new();
     for c in 0..clients {
         let client = server.client();
@@ -55,39 +56,51 @@ fn run_load(
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let model_name = args.str_or("model", "m");
-    let (weights, _) = Weights::load(&ckpt_path(&model_name))
-        .or_else(|_| Weights::load(&ckpt_path("tiny")))
-        .map_err(|_| anyhow::anyhow!("train a model first: drank train --model {model_name}"))?;
+    let backend = args.str_or("backend", "xla");
+    // checkpoint resolution: the named model, else any trained `tiny`
+    // checkpoint, else (ref backend only) random-init weights — so the
+    // example runs on a bare checkout with --backend ref
+    let weights = load_or_init(&model_name, false)
+        .or_else(|_| load_or_init("tiny", false))
+        .or_else(|e| if backend == "ref" { load_or_init(&model_name, true) } else { Err(e) })?;
     let data = DataBundle::build_cached(weights.config.vocab, 1234, 1.0);
     let stream = data.domain(Domain::Wiki2s).test.clone();
     let requests = args.usize_or("requests", 120);
     let clients = args.usize_or("clients", 4);
+    let workers = args.usize_or("workers", 1);
     let ratio = args.f64_or("ratio", 0.4);
 
-    println!("== dense ==");
+    println!("== dense ({workers} worker(s), {backend} backend) ==");
     let dense = CompressedModel::dense_passthrough(weights.clone());
-    let m0 = run_load(dense, stream.clone(), requests, clients)?;
+    let m0 = run_load(dense, stream.clone(), requests, clients, workers, &backend)?;
     println!(
-        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}",
+        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}, utilization {:.2}",
         m0.throughput_tps(),
         m0.p50_ms(),
         m0.p99_ms(),
-        m0.mean_batch_occupancy()
+        m0.mean_batch_occupancy(),
+        m0.utilization()
     );
 
     println!("== compressed (D-Rank @ {:.0}%) ==", ratio * 100.0);
-    let engine = Engine::open("artifacts")?;
     let opts = CompressOpts { method: Method::DRank, ratio, ..Default::default() };
     let copts = CalibOpts { batches: 8, ..Default::default() };
-    let (compressed, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
-    drop(engine); // the server builds its own runtime
-    let m1 = run_load(compressed, stream, requests, clients)?;
+    let compressed = if backend == "ref" {
+        let (m, _) = pipeline::compress_model_reference(&weights, &data, &copts, &opts)?;
+        m
+    } else {
+        let engine = Engine::open("artifacts")?;
+        let (m, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
+        m // the server builds its own runtime; engine drops here
+    };
+    let m1 = run_load(compressed, stream, requests, clients, workers, &backend)?;
     println!(
-        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}",
+        "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}, utilization {:.2}",
         m1.throughput_tps(),
         m1.p50_ms(),
         m1.p99_ms(),
-        m1.mean_batch_occupancy()
+        m1.mean_batch_occupancy(),
+        m1.utilization()
     );
     println!(
         "speedup: {:.2}x",

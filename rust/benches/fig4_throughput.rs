@@ -1,40 +1,36 @@
 //! Figure 4: serving throughput (tokens/sec) of the dense model vs
 //! compressed models at ratios 20–50%, through the coordinator over
-//! runtime-compiled factored graphs.
+//! runtime-compiled factored graphs — plus a worker-count scaling curve
+//! over the pure-Rust reference backend.
 //!
 //! Expected shape: every compressed model >= dense; throughput increases
 //! with the compression ratio; D-Rank >= Basis Sharing (its allocations
-//! skew rank toward cheap, high-value groups).
+//! skew rank toward cheap, high-value groups). On the scaling curve,
+//! aggregate throughput rises with the worker count until the machine's
+//! cores saturate (the reference forward is single-threaded per worker,
+//! so workers scale near-linearly at small N).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use drank::compress::Method;
-use drank::coordinator::{Server, ServerOpts};
+use drank::coordinator::{spawn_model_server, Server, ServerOpts};
 use drank::data::synlang::Domain;
 use drank::model::lowrank::CompressedModel;
 use drank::report::Table;
 use drank::util::rng::Rng;
 
-fn serve(model: CompressedModel, stream: &[u32], requests: usize) -> drank::coordinator::Metrics {
-    let cfg = model.config();
-    // serve with a larger batch than the eval artifacts use: the factored
-    // matmuls only beat dense when the GEMMs are compute-bound, which at
-    // tinylm widths needs more rows (paper-scale models are always there)
-    let batch = common::env_usize("DRANK_SERVE_BATCH", 32);
-    let server = Server::spawn(
-        move || {
-            let rt = drank::runtime::Runtime::cpu()?;
-            drank::graph::compile_forward(&rt, &model, batch, cfg.seq)
-        },
-        ServerOpts::default(),
-    );
+fn drive(
+    server: Server,
+    stream: &[u32],
+    seq: usize,
+    requests: usize,
+) -> drank::coordinator::Metrics {
     let clients = 8;
     let mut handles = Vec::new();
     for c in 0..clients {
         let client = server.client();
         let stream = stream.to_vec();
-        let seq = cfg.seq;
         let per = requests / clients;
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::new(c as u64);
@@ -50,6 +46,29 @@ fn serve(model: CompressedModel, stream: &[u32], requests: usize) -> drank::coor
     server.shutdown().expect("shutdown")
 }
 
+fn serve(
+    model: CompressedModel,
+    stream: &[u32],
+    requests: usize,
+    backend: &str,
+    workers: usize,
+) -> drank::coordinator::Metrics {
+    let cfg = model.config();
+    // serve with a larger batch than the eval artifacts use: the factored
+    // matmuls only beat dense when the GEMMs are compute-bound, which at
+    // tinylm widths needs more rows (paper-scale models are always there)
+    let batch = common::env_usize("DRANK_SERVE_BATCH", 32);
+    let server = spawn_model_server(
+        model,
+        batch,
+        cfg.seq,
+        backend,
+        ServerOpts { workers, ..Default::default() },
+    )
+    .expect("spawn");
+    drive(server, stream, cfg.seq, requests)
+}
+
 fn main() {
     let b = common::setup(&std::env::var("DRANK_SERVE_MODEL").unwrap_or_else(|_| "l".into()));
     let stats = b.calibrate(Domain::Wiki2s, false);
@@ -63,7 +82,7 @@ fn main() {
     );
 
     let dense = CompressedModel::dense_passthrough(b.weights.clone());
-    let m0 = serve(dense, &stream, requests);
+    let m0 = serve(dense, &stream, requests, "xla", 1);
     let base = m0.throughput_tps();
     t.row(vec![
         "Dense".into(),
@@ -77,7 +96,7 @@ fn main() {
     for method in [Method::SvdLlm, Method::BasisSharing, Method::DRank] {
         for &ratio in &ratios {
             let model = b.compress(&stats, &common::opts(method, ratio, 2));
-            let m = serve(model, &stream, requests);
+            let m = serve(model, &stream, requests, "xla", 1);
             t.row(vec![
                 format!("{} {:.0}%", method.name(), ratio * 100.0),
                 format!("{:.0}", m.throughput_tps()),
@@ -90,4 +109,33 @@ fn main() {
         eprintln!(" {} done", method.name());
     }
     common::emit(&t, "fig4_throughput");
+
+    // ---- worker-count scaling over the reference backend -----------------
+    // The acceptance bar: 2+ workers must beat the 1-worker baseline on the
+    // same workload (each worker owns a full backend instance, so the
+    // aggregate scales with cores).
+    let worker_counts: Vec<usize> = if common::fast() { vec![1, 2] } else { vec![1, 2, 4] };
+    let scale_requests = common::env_usize("DRANK_SCALE_REQUESTS", 64);
+    let mut ts = Table::new(
+        "Figure 4b: worker scaling (reference backend, dense weights)",
+        &["Workers", "tokens/s", "speedup vs 1 worker", "occupancy", "utilization"],
+    );
+    let mut base_ref = 0.0;
+    for &wk in &worker_counts {
+        let dense = CompressedModel::dense_passthrough(b.weights.clone());
+        let m = serve(dense, &stream, scale_requests, "ref", wk);
+        let tput = m.throughput_tps();
+        if base_ref == 0.0 {
+            base_ref = tput;
+        }
+        ts.row(vec![
+            format!("{wk}"),
+            format!("{tput:.0}"),
+            format!("{:.2}", tput / base_ref),
+            format!("{:.2}", m.mean_batch_occupancy()),
+            format!("{:.2}", m.utilization()),
+        ]);
+        eprintln!("ref backend, {wk} worker(s): {tput:.0} tok/s");
+    }
+    common::emit(&ts, "fig4_throughput_scaling");
 }

@@ -128,16 +128,58 @@ pub fn run(
     }
 
     // normalize to per-token means (grams stay as means of x xᵀ)
+    normalize(&mut grams, &mut absmean, cfg.layers, tokens);
+    Ok(CalibStats { grams, absmean, fisher, tokens })
+}
+
+/// Normalize raw per-batch sums to per-token means. Shared by the PJRT
+/// and reference calibration paths — the two must stay numerically
+/// identical for `run_reference` to remain the artifact-free twin of
+/// [`run`].
+fn normalize(
+    grams: &mut [Vec<MatF>],
+    absmean: &mut [Vec<Vec<f64>>],
+    layers: usize,
+    tokens: usize,
+) {
     let scale = 1.0 / tokens.max(1) as f64;
     for slot in 0..4 {
-        for l in 0..cfg.layers {
+        for l in 0..layers {
             grams[slot][l].scale(scale);
             for v in &mut absmean[slot][l] {
                 *v *= scale;
             }
         }
     }
-    Ok(CalibStats { grams, absmean, fisher, tokens })
+}
+
+/// Pure-Rust calibration via the instrumented reference forward
+/// (`model::fwd::accumulate_calib`) — the artifact-free twin of [`run`]:
+/// same slots, same per-token normalization, no PJRT or `artifacts/`
+/// required. Fisher rows are artifact-only (the backward pass lives in the
+/// AOT `fisher` artifact), so `opts.fisher` is rejected here.
+pub fn run_reference(
+    weights: &Weights,
+    data: &DataBundle,
+    opts: &CalibOpts,
+) -> Result<CalibStats> {
+    anyhow::ensure!(
+        !opts.fisher,
+        "fisher statistics need the AOT fisher artifact; use the PJRT calibration path"
+    );
+    let cfg = weights.config;
+    let stream = &data.domain(opts.domain).train;
+    let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed);
+    let mut sums = crate::model::fwd::CalibSums::new(&cfg);
+    for _ in 0..opts.batches {
+        let batch = batcher.next_batch();
+        crate::model::fwd::accumulate_calib(weights, &batch, cfg.batch, cfg.seq, &mut sums);
+    }
+    let tokens = sums.tokens;
+    let mut grams = sums.grams;
+    let mut absmean = sums.absmean;
+    normalize(&mut grams, &mut absmean, cfg.layers, tokens);
+    Ok(CalibStats { grams, absmean, fisher: BTreeMap::new(), tokens })
 }
 
 impl CalibStats {

@@ -4,10 +4,16 @@
 //!
 //! Compensated flow: layer blocks are compressed front-to-back; before each
 //! block, calibration re-runs with the *already-compressed* prefix (via
-//! dense reconstruction through the AOT calib artifact), so downstream
-//! whitening sees the deviated activations. Rank allocation is decided once
-//! up front from the clean statistics (the deviation shifts whitening, not
-//! the information-density ordering).
+//! dense reconstruction), so downstream whitening sees the deviated
+//! activations. Rank allocation is decided once up front from the clean
+//! statistics (the deviation shifts whitening, not the information-density
+//! ordering).
+//!
+//! Recalibration is a pluggable seam ([`compensated_with`]): production
+//! streams batches through the AOT calib artifact over PJRT, while the
+//! reference path ([`compress_model_reference`]) uses the instrumented
+//! pure-Rust forward — so the whole pipeline runs (and is tested) with no
+//! `artifacts/` directory.
 
 use std::collections::BTreeMap;
 
@@ -21,7 +27,7 @@ use crate::model::lowrank::{CompressedModel, GroupFactors, TypeRep};
 use crate::model::{Weights, COMPRESSIBLE};
 use crate::runtime::Engine;
 
-/// Calibrate + compress in one call (no compensation).
+/// Calibrate + compress in one call (PJRT calibration path).
 pub fn compress_model(
     engine: &Engine,
     weights: &Weights,
@@ -31,6 +37,22 @@ pub fn compress_model(
 ) -> Result<(CompressedModel, RankPlan)> {
     let stats = calib::run(engine, weights, data, copts)?;
     compress_with_stats(engine, weights, data, stats, copts, opts)
+}
+
+/// Calibrate + compress entirely in pure Rust (no artifacts, no PJRT):
+/// statistics come from the instrumented reference forward, and the
+/// compensated path recalibrates the same way.
+pub fn compress_model_reference(
+    weights: &Weights,
+    data: &DataBundle,
+    copts: &CalibOpts,
+    opts: &CompressOpts,
+) -> Result<(CompressedModel, RankPlan)> {
+    let stats = calib::run_reference(weights, data, copts)?;
+    if !opts.compensate {
+        return compress(weights, &stats, opts);
+    }
+    compensated_with(weights, stats, opts, |w| calib::run_reference(w, data, copts))
 }
 
 /// Compress given pre-computed statistics; dispatches on compensation.
@@ -43,22 +65,19 @@ pub fn compress_with_stats(
     opts: &CompressOpts,
 ) -> Result<(CompressedModel, RankPlan)> {
     if !opts.compensate {
-        return compress(weights, stats_ref(&stats), opts);
+        return compress(weights, &stats, opts);
     }
-    compensated(engine, weights, data, stats, copts, opts)
+    compensated_with(weights, stats, opts, |w| calib::run(engine, w, data, copts))
 }
 
-fn stats_ref(s: &CalibStats) -> &CalibStats {
-    s
-}
-
-fn compensated(
-    engine: &Engine,
+/// The §4.1 sequential-compensation loop over a pluggable recalibration
+/// provider: `recalib` is invoked with the partially-compressed model
+/// (reconstructed dense) before each block after the first.
+pub fn compensated_with(
     weights: &Weights,
-    data: &DataBundle,
     stats0: CalibStats,
-    copts: &CalibOpts,
     opts: &CompressOpts,
+    mut recalib: impl FnMut(&Weights) -> Result<CalibStats>,
 ) -> Result<(CompressedModel, RankPlan)> {
     let cfg = weights.config;
     // 1. allocation from clean statistics
@@ -85,7 +104,7 @@ fn compensated(
         if bi > 0 {
             // recalibrate with the compressed prefix reconstructed dense
             let current = model.to_dense();
-            stats = calib::run(engine, &current, data, copts)?;
+            stats = recalib(&current)?;
         }
         for typ in COMPRESSIBLE {
             let (d1, d2) = cfg.matrix_dims(typ);

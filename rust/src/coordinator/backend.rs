@@ -1,0 +1,259 @@
+//! The `ScoreBackend` seam: what a serving worker needs from a forward
+//! implementation, decoupled from how the forward runs.
+//!
+//! Two implementations ship:
+//!  - [`CompiledForward`] (the runtime-built XLA graph over PJRT) — the
+//!    production path the paper's throughput numbers come from;
+//!  - [`RefBackend`] — the pure-Rust reference forward (`model::fwd::nll`),
+//!    which needs no artifacts, no PJRT, and is `Send`-free-constructible
+//!    inside any worker thread. It is both the test oracle for the
+//!    coordinator suite and a real (if slow) serving backend: unlike the
+//!    fixed-shape compiled graph it can score partial batches without
+//!    padding them out to full batch capacity.
+//!
+//! Workers construct their backend *inside* the worker thread via the
+//! factory passed to `Server::spawn` (PJRT handles are `!Send`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::graph::CompiledForward;
+use crate::model::{fwd, Weights};
+
+/// A batched scoring backend: fixed `[batch, seq]` windows in, per-token
+/// NLL out. Implementations must be usable from the single worker thread
+/// that constructed them (no `Send` bound — PJRT handles are `!Send`).
+pub trait ScoreBackend {
+    /// Maximum rows per call.
+    fn batch(&self) -> usize;
+
+    /// Fixed (padded) tokens per row; NLL rows have `seq() - 1` entries.
+    fn seq(&self) -> usize;
+
+    /// Vocabulary size, when known: the coordinator rejects requests with
+    /// out-of-range token ids *per request* (typed `InvalidToken`) instead
+    /// of letting one malformed id fail — or crash — a whole batch.
+    fn vocab(&self) -> Option<usize> {
+        None
+    }
+
+    /// Score a full `[batch, seq]` token window -> `[batch, seq-1]` NLL.
+    fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Can this backend execute shapes smaller than `[batch, seq]`?
+    /// Shape-flexible backends run partial/short batches at reduced cost;
+    /// a compiled graph always executes its full fixed shape (this drives
+    /// the coordinator's executed-slot accounting).
+    fn is_shape_flexible(&self) -> bool {
+        false
+    }
+
+    /// Score `rows <= batch` rows, each padded to `used_seq` (2..=seq)
+    /// tokens; `tokens` is `[rows, used_seq]`, result `[rows, used_seq-1]`.
+    /// The default re-pads to the fixed `[batch, seq]` shape a compiled
+    /// graph requires and slices the result back down; shape-flexible
+    /// backends override this to skip the padded work entirely.
+    fn nll_window(&self, tokens: &[i32], rows: usize, used_seq: usize) -> Result<Vec<f32>> {
+        let (b, s) = (self.batch(), self.seq());
+        assert!(rows >= 1 && rows <= b, "rows {rows} out of 1..={b}");
+        assert!((2..=s).contains(&used_seq), "used_seq {used_seq} out of 2..={s}");
+        assert_eq!(tokens.len(), rows * used_seq, "tokens must be [rows, used_seq]");
+        let mut padded = vec![0i32; b * s];
+        for r in 0..rows {
+            padded[r * s..r * s + used_seq]
+                .copy_from_slice(&tokens[r * used_seq..(r + 1) * used_seq]);
+        }
+        let full = self.nll(&padded)?;
+        let mut out = Vec::with_capacity(rows * (used_seq - 1));
+        for r in 0..rows {
+            out.extend_from_slice(&full[r * (s - 1)..r * (s - 1) + (used_seq - 1)]);
+        }
+        Ok(out)
+    }
+}
+
+impl ScoreBackend for CompiledForward {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(self.vocab)
+    }
+
+    fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        CompiledForward::nll(self, tokens)
+    }
+}
+
+/// Pure-Rust reference backend over dense weights (compressed models are
+/// reconstructed W ≈ B·C first — numerically equivalent, see the
+/// integration tests). Runs with no `artifacts/` directory and no PJRT.
+pub struct RefBackend {
+    weights: Arc<Weights>,
+    batch: usize,
+    seq: usize,
+}
+
+impl RefBackend {
+    pub fn new(weights: Weights, batch: usize, seq: usize) -> Self {
+        Self::shared(Arc::new(weights), batch, seq)
+    }
+
+    /// Share one weight set across N workers (the reference forward is
+    /// pure Rust, so unlike PJRT handles it can be shared freely) — an
+    /// N-worker server should reconstruct/load once and pass clones of
+    /// the `Arc` instead of paying N copies.
+    pub fn shared(weights: Arc<Weights>, batch: usize, seq: usize) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(seq >= 2, "seq must be >= 2 (NLL predicts positions 1..seq)");
+        Self { weights, batch, seq }
+    }
+
+}
+
+impl RefBackend {
+    /// The reference forward indexes the embedding by raw token id, so an
+    /// out-of-range id would panic deep inside `fwd::nll` — turn it into
+    /// an error here (the coordinator normally screens ids first; this is
+    /// the belt-and-suspenders for direct library users).
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let v = self.weights.config.vocab;
+        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= v) {
+            anyhow::bail!("token id {bad} outside vocabulary of {v}");
+        }
+        Ok(())
+    }
+}
+
+impl ScoreBackend for RefBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(self.weights.config.vocab)
+    }
+
+    fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch * self.seq,
+            "tokens must be [batch={}, seq={}]",
+            self.batch,
+            self.seq
+        );
+        self.check_tokens(tokens)?;
+        Ok(fwd::nll(&self.weights, tokens, self.batch, self.seq))
+    }
+
+    fn is_shape_flexible(&self) -> bool {
+        true
+    }
+
+    /// Partial/short batches run at `[rows, used_seq]` cost — the
+    /// reference forward takes any shape, so no padding is ever computed.
+    fn nll_window(&self, tokens: &[i32], rows: usize, used_seq: usize) -> Result<Vec<f32>> {
+        assert!(rows >= 1 && rows <= self.batch, "rows {rows} out of 1..={}", self.batch);
+        assert!(
+            (2..=self.seq).contains(&used_seq),
+            "used_seq {used_seq} out of 2..={}",
+            self.seq
+        );
+        assert_eq!(tokens.len(), rows * used_seq, "tokens must be [rows, used_seq]");
+        self.check_tokens(tokens)?;
+        Ok(fwd::nll(&self.weights, tokens, rows, used_seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn ref_backend_matches_direct_forward() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 11);
+        let be = RefBackend::new(w.clone(), cfg.batch, cfg.seq);
+        let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let got = be.nll(&toks).unwrap();
+        let want = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+        assert_eq!(got, want);
+        assert_eq!(got.len(), cfg.batch * (cfg.seq - 1));
+    }
+
+    #[test]
+    fn partial_rows_match_full_batch_rows() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 12);
+        let be = RefBackend::new(w, cfg.batch, cfg.seq);
+        let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let full = be.nll(&toks).unwrap();
+        let one = be.nll_window(&toks[..cfg.seq], 1, cfg.seq).unwrap();
+        assert_eq!(one.len(), cfg.seq - 1);
+        // rows are independent in the reference forward: bitwise identical
+        assert_eq!(one, full[..cfg.seq - 1].to_vec());
+    }
+
+    #[test]
+    fn shortened_window_matches_full_padding() {
+        // causality: a [1, used_seq] window equals the first used_seq-1
+        // NLLs of the zero-padded full-seq row
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 13);
+        let be = RefBackend::new(w.clone(), cfg.batch, cfg.seq);
+        let len = 10usize;
+        let toks: Vec<i32> = (1..=len as i32).collect();
+        let small = be.nll_window(&toks, 1, len).unwrap();
+        assert_eq!(small.len(), len - 1);
+        let mut padded = vec![0i32; cfg.seq];
+        padded[..len].copy_from_slice(&toks);
+        let full = fwd::nll(&w, &padded, 1, cfg.seq);
+        for i in 0..len - 1 {
+            assert!((small[i] - full[i]).abs() < 1e-6, "position {i}");
+        }
+    }
+
+    /// RefBackend with the trait's *default* (fixed-shape) window path.
+    struct FixedShape(RefBackend);
+
+    impl ScoreBackend for FixedShape {
+        fn batch(&self) -> usize {
+            self.0.batch()
+        }
+        fn seq(&self) -> usize {
+            self.0.seq()
+        }
+        fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            self.0.nll(tokens)
+        }
+    }
+
+    #[test]
+    fn default_window_impl_matches_flexible_override() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 14);
+        let flex = RefBackend::new(w.clone(), cfg.batch, cfg.seq);
+        let fixed = FixedShape(RefBackend::new(w, cfg.batch, cfg.seq));
+        assert!(flex.is_shape_flexible());
+        assert!(!fixed.is_shape_flexible());
+        let used_seq = 8usize;
+        let toks: Vec<i32> = (0..2 * used_seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let a = flex.nll_window(&toks, 2, used_seq).unwrap();
+        let b = fixed.nll_window(&toks, 2, used_seq).unwrap();
+        assert_eq!(a.len(), 2 * (used_seq - 1));
+        assert_eq!(b.len(), a.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,36 +1,48 @@
-//! Serving coordinator: request router + dynamic batcher over a compiled
-//! forward graph (the L3 runtime the paper's throughput numbers come from).
+//! Serving coordinator: request router + dynamic batcher over N worker
+//! threads, each owning its own [`ScoreBackend`] (the L3 runtime the
+//! paper's throughput numbers come from).
 //!
-//! Architecture (std threads + channels; tokio is unavailable offline):
+//! Architecture (std threads + condvar queue; tokio is unavailable offline):
 //!
 //! ```text
-//!   clients ──score()──▶ bounded channel (backpressure)
-//!                           │
-//!                    batcher/worker thread
-//!                    (owns the PJRT objects, which are !Send:
-//!                     builds the graph, drains up to `batch`
-//!                     requests per window, pads, executes)
-//!                           │
-//!   clients ◀──Response── per-request reply channels
+//!   clients ──score()/try_score()──▶ SharedQueue (bounded, Mutex+Condvar)
+//!                                        │  QueueFull / Timeout / TooLong
+//!                                        │  rejected with typed errors
+//!              ┌─────────────────────────┼─────────────────────────┐
+//!        worker 0                   worker 1        ...       worker N-1
+//!   (each thread builds its own backend via the factory — PJRT
+//!    handles are !Send; drains up to `batch` length-bucketed
+//!    requests per window, pads, executes, replies)
+//!              └─────────────────────────┴─────────────────────────┘
+//!   clients ◀──Result<Response, ScoreError>── per-request reply channels
 //! ```
 //!
-//! Scoring requests return per-token NLL (the serving primitive behind
-//! PPL evaluation, option scoring, and reranking workloads).
+//! The backend seam ([`ScoreBackend`]) is pluggable: production serves the
+//! runtime-compiled XLA graph, while [`RefBackend`] (pure Rust, no
+//! artifacts) backs the coordinator test suite and artifact-free serving.
+//! Shutdown closes the queue and drains every in-flight request before the
+//! workers exit; per-worker metrics, queue-depth samples, and padding
+//! efficiency land in [`Metrics`].
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+pub mod backend;
+
+pub use backend::{RefBackend, ScoreBackend};
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::graph::CompiledForward;
 use crate::util::percentile;
 
-/// A scoring request: token ids (<= model seq len).
+/// A scoring request: token ids (<= backend seq len, or it is rejected).
 pub struct Request {
     pub tokens: Vec<u32>,
-    pub reply: Sender<Response>,
+    pub reply: Sender<ScoreResult>,
     pub enqueued: Instant,
 }
 
@@ -40,6 +52,58 @@ pub struct Response {
     /// per-token NLL over the request's own tokens (len = tokens-1)
     pub nll: Vec<f32>,
     pub latency_ms: f64,
+    /// which worker served the request
+    pub worker: usize,
+}
+
+/// Typed rejection/failure reasons — explicit instead of unbounded blocking.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScoreError {
+    /// `try_score` found the bounded queue at capacity.
+    QueueFull,
+    /// The request spent longer than the configured deadline queued.
+    Timeout,
+    /// The request exceeds the backend's sequence capacity (no silent
+    /// truncation: the old coordinator clipped with `take(seq)`).
+    TooLong { len: usize, seq: usize },
+    /// A token id is outside the backend's vocabulary — rejected per
+    /// request instead of letting one malformed id poison a whole batch
+    /// (or panic a worker).
+    InvalidToken { id: u32, vocab: usize },
+    /// The server stopped before (or while) handling the request.
+    Shutdown,
+    /// The backend failed to build or to execute.
+    Backend(String),
+}
+
+impl fmt::Display for ScoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScoreError::QueueFull => write!(f, "request queue full"),
+            ScoreError::Timeout => write!(f, "deadline exceeded while queued"),
+            ScoreError::TooLong { len, seq } => {
+                write!(f, "request of {len} tokens exceeds backend seq {seq}")
+            }
+            ScoreError::InvalidToken { id, vocab } => {
+                write!(f, "token id {id} outside vocabulary of {vocab}")
+            }
+            ScoreError::Shutdown => write!(f, "server stopped"),
+            ScoreError::Backend(e) => write!(f, "backend error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ScoreError {}
+
+pub type ScoreResult = std::result::Result<Response, ScoreError>;
+
+/// Per-worker slice of the aggregate metrics.
+#[derive(Default, Clone, Debug)]
+pub struct WorkerMetrics {
+    pub requests: usize,
+    pub tokens: usize,
+    pub batches: usize,
+    pub busy_secs: f64,
 }
 
 /// Aggregate serving metrics.
@@ -51,6 +115,20 @@ pub struct Metrics {
     pub latencies_ms: Vec<f64>,
     pub busy_secs: f64,
     pub wall_secs: f64,
+    /// token-slots the backends actually executed: `rows * used_seq` per
+    /// batch for shape-flexible backends, the full `batch * seq` for
+    /// fixed-shape compiled graphs
+    pub padded_tokens: usize,
+    /// running sum of queue depth sampled as each batch was assembled
+    /// (O(1) memory for long-lived servers; mean via `mean_queue_depth`)
+    pub queue_depth_sum: usize,
+    /// number of queue-depth samples (== batches that recorded one)
+    pub queue_depth_samples: usize,
+    pub rejected_queue_full: usize,
+    pub rejected_timeout: usize,
+    pub rejected_too_long: usize,
+    pub rejected_invalid_token: usize,
+    pub per_worker: Vec<WorkerMetrics>,
 }
 
 impl Metrics {
@@ -69,132 +147,564 @@ impl Metrics {
     pub fn mean_batch_occupancy(&self) -> f64 {
         self.requests as f64 / self.batches.max(1) as f64
     }
+
+    /// Useful tokens / executed token-slots (1.0 = zero padding waste).
+    pub fn padding_efficiency(&self) -> f64 {
+        self.tokens as f64 / self.padded_tokens.max(1) as f64
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth_samples == 0 {
+            return 0.0;
+        }
+        self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+    }
+
+    /// Aggregate busy fraction across workers (1.0 = all workers saturated).
+    pub fn utilization(&self) -> f64 {
+        let n = self.per_worker.len().max(1) as f64;
+        self.busy_secs / (self.wall_secs.max(1e-9) * n)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected_queue_full
+            + self.rejected_timeout
+            + self.rejected_too_long
+            + self.rejected_invalid_token
+    }
 }
 
 /// Coordinator configuration.
+#[derive(Clone, Debug)]
 pub struct ServerOpts {
-    /// request queue bound (backpressure: senders block when full)
+    /// request queue bound (scores block for space; try_score rejects)
     pub queue: usize,
-    /// how long the batcher waits to fill a batch before dispatching
+    /// how long a worker waits to fill a batch before dispatching
     pub batch_window: Duration,
+    /// worker threads, each with its own backend instance
+    pub workers: usize,
+    /// per-request queueing deadline; exceeded requests get `Timeout`
+    pub deadline: Option<Duration>,
+    /// assemble batches from same-length-bucket requests, so the executed
+    /// window (the longest request in the batch) stays small — this is
+    /// what lets short requests run at short-sequence cost. Only applied
+    /// on shape-flexible backends; fixed-shape compiled graphs always run
+    /// the full window, where bucketing would just fragment batches
+    pub bucket_by_length: bool,
 }
 
 impl Default for ServerOpts {
     fn default() -> Self {
-        Self { queue: 256, batch_window: Duration::from_millis(2) }
+        Self {
+            queue: 256,
+            batch_window: Duration::from_millis(2),
+            workers: 1,
+            deadline: None,
+            bucket_by_length: true,
+        }
     }
 }
 
-/// Handle for submitting requests.
+/// Length bucket: requests whose lengths share a padded power-of-two
+/// bucket are batched together, so short requests don't ride along with
+/// full-length ones (the executed window is the batch's longest request).
+fn bucket_of(len: usize) -> u32 {
+    len.max(1).next_power_of_two().trailing_zeros()
+}
+
+// ------------------------------------------------------------ shared queue
+
+struct QueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue feeding the workers (Mutex + two Condvars).
+pub(crate) struct SharedQueue {
+    cap: usize,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl SharedQueue {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push with backpressure; fails once the queue is closed.
+    fn push_wait(&self, req: Request) -> std::result::Result<(), ScoreError> {
+        let mut s = self.state.lock().unwrap();
+        while !s.closed && s.q.len() >= self.cap {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return Err(ScoreError::Shutdown);
+        }
+        s.q.push_back(req);
+        // notify_all, not notify_one: a single wakeup could land on a
+        // bucket-filtered pop_matching waiter that refuses the item while
+        // an idle pop_any worker sleeps (lost wakeup)
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking push: `QueueFull` when at capacity.
+    fn try_push(&self, req: Request) -> std::result::Result<(), ScoreError> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(ScoreError::Shutdown);
+        }
+        if s.q.len() >= self.cap {
+            return Err(ScoreError::QueueFull);
+        }
+        s.q.push_back(req);
+        self.not_empty.notify_all(); // see push_wait
+        Ok(())
+    }
+
+    /// Blocking pop; `None` only once the queue is closed *and* drained —
+    /// this is what makes shutdown drain in-flight requests.
+    fn pop_any(&self) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (used to drain after a backend construction error).
+    fn pop_now(&self) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        let r = s.q.pop_front();
+        if r.is_some() {
+            self.not_full.notify_one();
+        }
+        r
+    }
+
+    /// Pop the first request in `bucket` (or any request when `None`),
+    /// waiting until `deadline` for one to arrive.
+    fn pop_matching(&self, deadline: Instant, bucket: Option<u32>) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let idx = match bucket {
+                None => {
+                    if s.q.is_empty() {
+                        None
+                    } else {
+                        Some(0)
+                    }
+                }
+                Some(bk) => s.q.iter().position(|r| bucket_of(r.tokens.len()) == bk),
+            };
+            if let Some(i) = idx {
+                let r = s.q.remove(i);
+                self.not_full.notify_one();
+                return r;
+            }
+            if s.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timed_out) =
+                self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+}
+
+// ------------------------------------------------------------------ client
+
+/// Handle for submitting requests (cheap to clone, thread-safe).
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Request>,
+    queue: Arc<SharedQueue>,
+    metrics: Arc<Mutex<Metrics>>,
 }
 
 impl Client {
-    /// Blocking score call.
-    pub fn score(&self, tokens: Vec<u32>) -> Result<Response> {
+    /// Blocking score call: waits for queue space (backpressure), then for
+    /// the response. Over-length and deadline violations come back as
+    /// typed errors.
+    pub fn score(&self, tokens: Vec<u32>) -> ScoreResult {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Request { tokens, reply: rtx, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+        self.queue
+            .push_wait(Request { tokens, reply: rtx, enqueued: Instant::now() })?;
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ScoreError::Shutdown),
+        }
+    }
+
+    /// Like [`score`](Self::score), but rejects immediately with
+    /// `QueueFull` instead of blocking when the queue is at capacity.
+    pub fn try_score(&self, tokens: Vec<u32>) -> ScoreResult {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let pushed =
+            self.queue.try_push(Request { tokens, reply: rtx, enqueued: Instant::now() });
+        if let Err(e) = pushed {
+            if e == ScoreError::QueueFull {
+                self.metrics.lock().unwrap().rejected_queue_full += 1;
+            }
+            return Err(e);
+        }
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ScoreError::Shutdown),
+        }
     }
 }
 
-/// A running scoring server.
+// ------------------------------------------------------------------ server
+
+/// A running scoring server: N workers over a shared bounded queue.
 pub struct Server {
-    tx: Option<SyncSender<Request>>,
-    worker: Option<JoinHandle<Result<()>>>,
+    queue: Arc<SharedQueue>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    /// stamped when the first worker's backend is ready, so wall-clock
+    /// throughput excludes backend construction/compile time (matching
+    /// the pre-multi-worker benchmark semantics)
+    serve_start: Arc<Mutex<Option<Instant>>>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
 
 impl Server {
-    /// Spawn the worker. `make_forward` runs *inside* the worker thread
-    /// because PJRT handles are not Send (same pattern as a GPU worker
-    /// owning its CUDA context).
-    pub fn spawn<F>(make_forward: F, opts: ServerOpts) -> Self
+    /// Spawn `opts.workers` worker threads. `make_backend` runs once
+    /// *inside each* worker thread (PJRT handles are not `Send` — same
+    /// pattern as a GPU worker owning its CUDA context), so it must be a
+    /// reusable `Fn`, typically borrowing a shared model.
+    pub fn spawn<B, F>(make_backend: F, opts: ServerOpts) -> Self
     where
-        F: FnOnce() -> Result<CompiledForward> + Send + 'static,
+        B: ScoreBackend + 'static,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(opts.queue);
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || worker_loop(make_forward, rx, opts, m2));
-        Self { tx: Some(tx), worker: Some(worker), metrics }
+        let n = opts.workers.max(1);
+        let queue = Arc::new(SharedQueue::new(opts.queue));
+        let metrics = Arc::new(Mutex::new(Metrics {
+            per_worker: vec![WorkerMetrics::default(); n],
+            ..Default::default()
+        }));
+        let factory = Arc::new(make_backend);
+        let serve_start: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+        let mut workers = Vec::with_capacity(n);
+        for id in 0..n {
+            let f = factory.clone();
+            let q = queue.clone();
+            let m = metrics.clone();
+            let o = opts.clone();
+            let s = serve_start.clone();
+            workers.push(std::thread::spawn(move || worker_loop(id, f, q, o, m, s)));
+        }
+        Self { queue, workers, serve_start, metrics }
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.as_ref().expect("server running").clone() }
+        Client { queue: self.queue.clone(), metrics: self.metrics.clone() }
     }
 
-    /// Stop accepting requests and join the worker.
+    /// Stop accepting requests, drain everything already queued, and join
+    /// the workers. Returns the final metrics (or the first worker error).
     pub fn shutdown(mut self) -> Result<Metrics> {
-        drop(self.tx.take()); // closes the channel; worker drains + exits
-        let res = self.worker.take().unwrap().join().expect("worker panicked");
-        res?;
-        let m = self.metrics.lock().unwrap().clone();
+        self.queue.close();
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.workers.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("worker thread panicked"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut m = self.metrics.lock().unwrap().clone();
+        if let Some(t0) = *self.serve_start.lock().unwrap() {
+            m.wall_secs = t0.elapsed().as_secs_f64();
+        }
         Ok(m)
     }
 }
 
-fn worker_loop(
-    make_forward: impl FnOnce() -> Result<CompiledForward>,
-    rx: Receiver<Request>,
+impl Drop for Server {
+    fn drop(&mut self) {
+        // a dropped server must not leave workers blocked on the queue
+        self.queue.close();
+    }
+}
+
+/// Spawn a server for a (possibly compressed) model on the named backend:
+/// `"ref"` (pure-Rust reference forward, artifact-free) or `"xla"`
+/// (runtime-compiled PJRT graph). One dense reconstruction is shared by
+/// all reference workers; XLA workers each compile their own graph (PJRT
+/// handles are `!Send`). The single seam every serving driver goes
+/// through (CLI, examples, benches).
+pub fn spawn_model_server(
+    model: crate::model::lowrank::CompressedModel,
+    batch: usize,
+    seq: usize,
+    backend: &str,
     opts: ServerOpts,
+) -> Result<Server> {
+    match backend {
+        "ref" => {
+            let dense = Arc::new(model.to_dense());
+            Ok(Server::spawn(
+                move || Ok(RefBackend::shared(dense.clone(), batch, seq)),
+                opts,
+            ))
+        }
+        "xla" => Ok(Server::spawn(
+            move || {
+                let rt = crate::runtime::Runtime::cpu()?;
+                crate::graph::compile_forward(&rt, &model, batch, seq)
+            },
+            opts,
+        )),
+        other => anyhow::bail!("unknown backend '{other}' (expected xla or ref)"),
+    }
+}
+
+// ------------------------------------------------------------ worker loop
+
+struct WorkerCtx {
+    id: usize,
+    seq: usize,
+    vocab: Option<usize>,
+    deadline: Option<Duration>,
     metrics: Arc<Mutex<Metrics>>,
-) -> Result<()> {
-    let fwd = make_forward()?;
-    let (bsz, seq) = (fwd.batch, fwd.seq);
-    let wall = Instant::now();
-    loop {
-        // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break, // all clients gone
-        };
-        let mut batch = vec![first];
-        // fill the rest of the batch within the window
-        let deadline = Instant::now() + opts.batch_window;
-        while batch.len() < bsz {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+}
+
+impl WorkerCtx {
+    /// Admission control: replies (and counts) rejections, passes the rest.
+    fn screen(&self, req: Request) -> Option<Request> {
+        if req.tokens.len() > self.seq {
+            self.metrics.lock().unwrap().rejected_too_long += 1;
+            let _ = req.reply.send(Err(ScoreError::TooLong {
+                len: req.tokens.len(),
+                seq: self.seq,
+            }));
+            return None;
+        }
+        if let Some(v) = self.vocab {
+            if let Some(&bad) = req.tokens.iter().find(|&&t| t as usize >= v) {
+                self.metrics.lock().unwrap().rejected_invalid_token += 1;
+                let _ = req
+                    .reply
+                    .send(Err(ScoreError::InvalidToken { id: bad, vocab: v }));
+                return None;
             }
         }
-        // pad + execute
-        let mut tokens = vec![0i32; bsz * seq];
+        if let Some(d) = self.deadline {
+            if req.enqueued.elapsed() > d {
+                self.metrics.lock().unwrap().rejected_timeout += 1;
+                let _ = req.reply.send(Err(ScoreError::Timeout));
+                return None;
+            }
+        }
+        Some(req)
+    }
+}
+
+/// Closes *and drains* the queue when a worker exits for any reason —
+/// including a panic unwinding out of the backend. Without this, a dead
+/// worker would leave requests queued (their clients blocked in `recv`
+/// forever) and later `score()` calls would block on an open queue. On a
+/// normal exit the queue is already closed and empty, so this is a no-op;
+/// with several workers the healthy ones race this drain and serve what
+/// they grab first, which is fine — the server is going down either way.
+struct CloseOnExit(Arc<SharedQueue>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        self.0.close();
+        while let Some(req) = self.0.pop_now() {
+            let _ = req.reply.send(Err(ScoreError::Shutdown));
+        }
+    }
+}
+
+fn worker_loop<B, F>(
+    id: usize,
+    factory: Arc<F>,
+    queue: Arc<SharedQueue>,
+    opts: ServerOpts,
+    metrics: Arc<Mutex<Metrics>>,
+    serve_start: Arc<Mutex<Option<Instant>>>,
+) -> Result<()>
+where
+    B: ScoreBackend,
+    F: Fn() -> Result<B>,
+{
+    let _close_guard = CloseOnExit(queue.clone());
+    let backend = match (*factory)() {
+        Ok(b) => b,
+        Err(e) => {
+            // fail fast: no backend means nobody may be left waiting
+            queue.close();
+            while let Some(req) = queue.pop_now() {
+                let _ = req.reply.send(Err(ScoreError::Backend(e.to_string())));
+            }
+            return Err(e);
+        }
+    };
+    // release the factory (and whatever model it captured) once the
+    // backend exists — the last worker to construct frees the captures,
+    // matching the old FnOnce behavior instead of pinning the model for
+    // the server's whole lifetime
+    drop(factory);
+    // the serving wall clock starts when the first backend is ready:
+    // construction/compile time must not count into throughput
+    let started = {
+        let mut s = serve_start.lock().unwrap();
+        *s.get_or_insert_with(Instant::now)
+    };
+    let (bsz, seq) = (backend.batch(), backend.seq());
+    let ctx = WorkerCtx {
+        id,
+        seq,
+        vocab: backend.vocab(),
+        deadline: opts.deadline,
+        metrics: metrics.clone(),
+    };
+    loop {
+        // block for the first admissible request of the batch
+        let first = loop {
+            match queue.pop_any() {
+                None => {
+                    // queue closed + drained: record wall time and exit
+                    let mut m = metrics.lock().unwrap();
+                    m.wall_secs = started.elapsed().as_secs_f64();
+                    return Ok(());
+                }
+                Some(r) => {
+                    if let Some(ok) = ctx.screen(r) {
+                        break ok;
+                    }
+                }
+            }
+        };
+        let depth = queue.depth();
+        // bucketing only pays off when the backend can shrink its window;
+        // a fixed-shape graph runs full [batch, seq] regardless, so
+        // fragmenting its batches by length would only hurt occupancy
+        let bucket = if opts.bucket_by_length && backend.is_shape_flexible() {
+            Some(bucket_of(first.tokens.len()))
+        } else {
+            None
+        };
+        let mut batch = vec![first];
+        // fill the rest of the batch (same length bucket) within the window
+        let fill_deadline = Instant::now() + opts.batch_window;
+        while batch.len() < bsz {
+            match queue.pop_matching(fill_deadline, bucket) {
+                None => break,
+                Some(r) => {
+                    if let Some(ok) = ctx.screen(r) {
+                        batch.push(ok);
+                    }
+                }
+            }
+        }
+        // shrink the executed window to the longest request in the batch
+        // (length bucketing makes batches share a small window), pad rows
+        // to it, and execute only the occupied rows
+        let rows = batch.len();
+        let used_seq = batch
+            .iter()
+            .map(|r| r.tokens.len())
+            .max()
+            .unwrap_or(2)
+            .clamp(2, seq);
+        let mut tokens = vec![0i32; rows * used_seq];
         for (row, req) in batch.iter().enumerate() {
-            for (i, &t) in req.tokens.iter().take(seq).enumerate() {
-                tokens[row * seq + i] = t as i32;
+            for (i, &t) in req.tokens.iter().enumerate() {
+                tokens[row * used_seq + i] = t as i32;
             }
         }
         let busy = Instant::now();
-        let nll = fwd.nll(&tokens)?;
+        let result = backend.nll_window(&tokens, rows, used_seq);
         let busy_secs = busy.elapsed().as_secs_f64();
+        // slots the backend actually executed: a fixed-shape compiled
+        // graph always runs its full [batch, seq] window
+        let executed_slots = if backend.is_shape_flexible() {
+            rows * used_seq
+        } else {
+            bsz * seq
+        };
+
+        // reply outside the metrics lock: the response path must not
+        // serialize across workers
+        let mut served: Vec<(usize, f64)> = Vec::with_capacity(rows);
+        match result {
+            Ok(nll) => {
+                for (row, req) in batch.into_iter().enumerate() {
+                    let n = req.tokens.len();
+                    let start = row * (used_seq - 1);
+                    let row_nll = nll[start..start + n.saturating_sub(1)].to_vec();
+                    let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    served.push((n, latency_ms));
+                    let _ = req.reply.send(Ok(Response { nll: row_nll, latency_ms, worker: id }));
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    let _ = req.reply.send(Err(ScoreError::Backend(e.to_string())));
+                }
+            }
+        }
 
         let mut m = metrics.lock().unwrap();
         m.batches += 1;
         m.busy_secs += busy_secs;
-        for (row, req) in batch.into_iter().enumerate() {
-            let n = req.tokens.len().min(seq);
-            let row_nll = nll[row * (seq - 1)..row * (seq - 1) + n.saturating_sub(1)].to_vec();
-            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        m.queue_depth_sum += depth;
+        m.queue_depth_samples += 1;
+        m.padded_tokens += executed_slots;
+        m.per_worker[id].batches += 1;
+        m.per_worker[id].busy_secs += busy_secs;
+        for &(n, latency_ms) in &served {
             m.requests += 1;
             m.tokens += n;
             m.latencies_ms.push(latency_ms);
-            let _ = req.reply.send(Response { nll: row_nll, latency_ms });
+            m.per_worker[id].requests += 1;
+            m.per_worker[id].tokens += n;
         }
-        m.wall_secs = wall.elapsed().as_secs_f64();
+        m.wall_secs = started.elapsed().as_secs_f64();
     }
-    let mut m = metrics.lock().unwrap();
-    m.wall_secs = wall.elapsed().as_secs_f64();
-    Ok(())
 }
 
 #[cfg(test)]
@@ -210,9 +720,70 @@ mod tests {
             latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
             busy_secs: 0.5,
             wall_secs: 2.0,
+            padded_tokens: 1280,
+            queue_depth_sum: 6,
+            queue_depth_samples: 3,
+            ..Default::default()
         };
         assert!((m.throughput_tps() - 480.0).abs() < 1e-9);
         assert_eq!(m.mean_batch_occupancy(), 2.5);
         assert!(m.p50_ms() >= 1.0 && m.p99_ms() <= 4.0);
+        assert!((m.padding_efficiency() - 0.75).abs() < 1e-9);
+        assert!((m.mean_queue_depth() - 2.0).abs() < 1e-9);
+        assert_eq!(m.rejected(), 0);
+    }
+
+    #[test]
+    fn buckets_group_similar_lengths() {
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), bucket_of(4));
+        assert_eq!(bucket_of(33), bucket_of(64));
+        assert_ne!(bucket_of(32), bucket_of(33));
+        assert_eq!(bucket_of(0), bucket_of(1)); // empty requests don't panic
+    }
+
+    fn req(len: usize) -> (Request, std::sync::mpsc::Receiver<ScoreResult>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (Request { tokens: vec![1; len], reply: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn queue_capacity_and_close_semantics() {
+        let q = SharedQueue::new(2);
+        let (r1, _k1) = req(4);
+        let (r2, _k2) = req(4);
+        let (r3, _k3) = req(4);
+        q.try_push(r1).unwrap();
+        q.try_push(r2).unwrap();
+        assert_eq!(q.try_push(r3).unwrap_err(), ScoreError::QueueFull);
+        assert_eq!(q.depth(), 2);
+        q.close();
+        let (r4, _k4) = req(4);
+        assert_eq!(q.try_push(r4).unwrap_err(), ScoreError::Shutdown);
+        // closed queues still drain (shutdown semantics)
+        assert!(q.pop_any().is_some());
+        assert!(q.pop_any().is_some());
+        assert!(q.pop_any().is_none());
+    }
+
+    #[test]
+    fn pop_matching_prefers_bucket() {
+        let q = SharedQueue::new(8);
+        let (long, _kl) = req(60); // bucket 6
+        let (short, _ks) = req(3); // bucket 2
+        q.try_push(long).unwrap();
+        q.try_push(short).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let got = q.pop_matching(deadline, Some(bucket_of(3))).unwrap();
+        assert_eq!(got.tokens.len(), 3); // skipped the longer request
+        assert_eq!(q.depth(), 1);
+        // no match in bucket -> times out without popping
+        let deadline = Instant::now() + Duration::from_millis(5);
+        assert!(q.pop_matching(deadline, Some(bucket_of(3))).is_none());
+        assert_eq!(q.depth(), 1);
+        // unbucketed pop takes whatever is first
+        let deadline = Instant::now() + Duration::from_millis(5);
+        assert_eq!(q.pop_matching(deadline, None).unwrap().tokens.len(), 60);
     }
 }

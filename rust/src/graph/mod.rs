@@ -32,6 +32,9 @@ pub struct CompiledForward {
     pub weights: Vec<xla::Literal>,
     pub batch: usize,
     pub seq: usize,
+    /// vocabulary size of the compiled model (admission control rejects
+    /// out-of-range token ids before they reach the gather)
+    pub vocab: usize,
 }
 
 impl CompiledForward {
@@ -127,7 +130,7 @@ pub fn compile_forward(
 
     let comp = builder.build(&builder.tuple(&[nll])?)?;
     let exe = rt.client().compile(&comp)?;
-    Ok(CompiledForward { exe, weights: params.literals, batch, seq })
+    Ok(CompiledForward { exe, weights: params.literals, batch, seq, vocab: cfg.vocab })
 }
 
 /// Convenience: compile the *dense* forward of plain weights.

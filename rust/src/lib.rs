@@ -9,7 +9,18 @@
 //!   HLO-text artifacts — `python/compile/model.py` + `aot.py`.
 //! - **L3 (this crate, runtime)**: the compression framework (effective
 //!   rank, Lagrange allocation, β-rebalancing, six methods), calibration,
-//!   evaluation, and a batching serving coordinator over PJRT.
+//!   evaluation, and a multi-worker batching serving coordinator.
+//!
+//! The serving stack is built around the `coordinator::ScoreBackend` seam:
+//! `Server::spawn` starts N worker threads over one shared bounded queue,
+//! and each worker constructs its own backend inside its thread (PJRT
+//! handles are `!Send`). Production workers run the runtime-compiled XLA
+//! graph (`graph::CompiledForward`); `coordinator::RefBackend` wraps the
+//! pure-Rust reference forward (`model::fwd`) so the coordinator — and its
+//! test suite — runs with no `artifacts/` directory and no PJRT at all.
+//! Batches are assembled per worker with length bucketing, per-request
+//! deadlines, and typed `QueueFull`/`Timeout`/`TooLong` rejection; shutdown
+//! drains every queued request before the workers exit.
 //!
 //! Python never runs on the request path; the compressed forward pass with
 //! exact dynamic ranks is built at runtime via `XlaBuilder` (`graph`).

@@ -6,17 +6,24 @@
 //!                [--beta 0.3] [--compensate] [--calib wiki2s] [--eval]
 //! drank eval     --model m [--domains wiki2s,ptbs,c4s] [--tasks]
 //! drank serve    --model m [--ratio 0.3] [--requests 200] [--clients 4]
+//!                [--workers 1] [--backend xla|ref] [--queue 256]
+//!                [--batch-window-ms 2] [--deadline-ms N]
 //! drank info
 //! ```
+//!
+//! `serve --backend ref` runs the coordinator over the pure-Rust reference
+//! forward — no `artifacts/` directory or PJRT needed (it even falls back
+//! to random-init weights when no checkpoint exists, so a bare checkout
+//! can exercise the full serving stack).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use drank::calib::CalibOpts;
 use drank::compress::{pipeline, CompressOpts, Method};
-use drank::coordinator::{Server, ServerOpts};
+use drank::coordinator::{spawn_model_server, ScoreError, ServerOpts};
 use drank::data::synlang::Domain;
 use drank::data::DataBundle;
 use drank::eval;
-use drank::model::{ckpt_path, logical_model, Weights};
+use drank::model::{ckpt_path, load_or_init, logical_model, Weights};
 use drank::report::{fmt_acc, fmt_ppl, Table};
 use drank::runtime::trainer::{self, TrainOpts};
 use drank::runtime::Engine;
@@ -42,11 +49,7 @@ fn main() -> Result<()> {
 
 /// Load a trained checkpoint for a logical model (or fail with guidance).
 fn load_ckpt(model: &str) -> Result<Weights> {
-    let path = ckpt_path(model);
-    let (w, step) = Weights::load(&path)
-        .with_context(|| format!("no checkpoint for '{model}' — run `drank train --model {model}` first"))?;
-    eprintln!("loaded {path} (step {step})");
-    Ok(w)
+    load_or_init(model, false)
 }
 
 fn bundle_for(w: &Weights, scale: f64) -> DataBundle {
@@ -200,32 +203,55 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "m");
-    let weights = load_ckpt(&model)?;
+    let backend = args.str_or("backend", "xla");
+    anyhow::ensure!(
+        backend == "xla" || backend == "ref",
+        "bad --backend {backend} (expected xla or ref)"
+    );
+    // the reference backend can serve a bare checkout: fall back to
+    // random-init weights when no checkpoint file exists (a corrupt
+    // checkpoint is still a hard error)
+    let weights = load_or_init(&model, backend == "ref")?;
     let cfg = weights.config;
     let data = bundle_for(&weights, 1.0);
     let ratio = args.f64_or("ratio", 0.0);
     let n_requests = args.usize_or("requests", 200);
     let n_clients = args.usize_or("clients", 4);
 
-    // optionally compress before serving
+    // optionally compress before serving (reference calibration when the
+    // reference backend was chosen, so no artifacts are needed)
     let served = if ratio > 0.0 {
-        let engine = Engine::open("artifacts")?;
         let opts = parse_compress_opts(args)?;
         let copts = CalibOpts::default();
-        let (m, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &CompressOpts { ratio, ..opts })?;
+        let m = if backend == "ref" {
+            let (m, _) = pipeline::compress_model_reference(
+                &weights, &data, &copts, &CompressOpts { ratio, ..opts },
+            )?;
+            m
+        } else {
+            let engine = Engine::open("artifacts")?;
+            let (m, _) = pipeline::compress_model(
+                &engine, &weights, &data, &copts, &CompressOpts { ratio, ..opts },
+            )?;
+            m
+        };
         println!("serving compressed model (ratio {:.2})", m.achieved_ratio());
         m
     } else {
         drank::model::lowrank::CompressedModel::dense_passthrough(weights)
     };
 
-    let server = Server::spawn(
-        move || {
-            let rt = drank::runtime::Runtime::cpu()?;
-            drank::graph::compile_forward(&rt, &served, cfg.batch, cfg.seq)
-        },
-        ServerOpts::default(),
-    );
+    let sopts = ServerOpts {
+        workers: args.usize_or("workers", 1),
+        queue: args.usize_or("queue", 256),
+        batch_window: args.duration_ms_or("batch-window-ms", 2),
+        deadline: args
+            .opt_usize("deadline-ms")
+            .map(|ms| std::time::Duration::from_millis(ms as u64)),
+        ..Default::default()
+    };
+    println!("spawning {} worker(s) on the {backend} backend", sopts.workers);
+    let server = spawn_model_server(served, cfg.batch, cfg.seq, &backend, sopts)?;
     // drive load from client threads
     let stream = data.domain(Domain::Wiki2s).test.clone();
     let per_client = n_requests / n_clients;
@@ -239,7 +265,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             for _ in 0..per_client {
                 let start = rng.below(stream.len() - seq);
                 let toks = stream[start..start + seq].to_vec();
-                client.score(toks).expect("score");
+                match client.score(toks) {
+                    Ok(_) => {}
+                    // load-shedding rejections are expected under
+                    // --deadline-ms; the server counts them
+                    Err(ScoreError::Timeout) | Err(ScoreError::QueueFull) => {}
+                    Err(e) => {
+                        eprintln!("client {c}: {e}");
+                        return;
+                    }
+                }
             }
         }));
     }
@@ -248,13 +283,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let m = server.shutdown()?;
     println!(
-        "served {} requests, {:.0} tokens/s, p50 {:.1} ms, p99 {:.1} ms, batch occupancy {:.2}",
+        "served {} requests ({} rejected), {:.0} tokens/s, p50 {:.1} ms, p99 {:.1} ms, \
+         occupancy {:.2}, padding eff {:.2}, mean queue depth {:.1}, utilization {:.2}",
         m.requests,
+        m.rejected(),
         m.throughput_tps(),
         m.p50_ms(),
         m.p99_ms(),
-        m.mean_batch_occupancy()
+        m.mean_batch_occupancy(),
+        m.padding_efficiency(),
+        m.mean_queue_depth(),
+        m.utilization()
     );
+    for (i, wm) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {i}: {} batches, {} requests, {} tokens, busy {:.2}s",
+            wm.batches, wm.requests, wm.tokens, wm.busy_secs
+        );
+    }
     Ok(())
 }
 

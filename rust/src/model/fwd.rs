@@ -1,13 +1,85 @@
-//! Pure-Rust reference forward pass (test oracle).
+//! Pure-Rust reference forward pass (test oracle + reference backend).
 //!
 //! A direct, loop-level port of `python/compile/model.py` used to
 //! cross-check the AOT artifacts and the runtime-built XLA graphs at tiny
-//! sizes. Single-threaded f32; not a performance path.
+//! sizes, to back the coordinator's artifact-free `RefBackend`, and — via
+//! the [`CalibSums`] observer — to collect calibration statistics without
+//! the PJRT `calib` artifact. Single-threaded f32; not a performance path.
 
-use super::Weights;
+use super::{ModelConfig, Weights};
+use crate::tensor::MatF;
 
 const EPS: f32 = 1e-5;
 const ROPE_THETA: f32 = 1e4;
+
+// Calibration slots (must mirror `calib::gram_slot`):
+// 0 = input to wq/wk/wv, 1 = input to wo, 2 = input to w_gate/w_up,
+// 3 = input to w_down.
+const SLOT_ATTN: usize = 0;
+const SLOT_O: usize = 1;
+const SLOT_MLP: usize = 2;
+const SLOT_DOWN: usize = 3;
+
+/// Raw calibration sums accumulated by the instrumented forward:
+/// un-normalized Σ x·xᵀ per (slot, layer) and Σ|x| per (slot, layer, dim),
+/// matching the wire semantics of the AOT `calib` artifact (the caller
+/// normalizes by total tokens, exactly like `calib::run`).
+pub struct CalibSums {
+    pub grams: Vec<Vec<MatF>>,
+    pub absmean: Vec<Vec<Vec<f64>>>,
+    pub tokens: usize,
+}
+
+impl CalibSums {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let slot_dim = [cfg.d, cfg.d, cfg.d, cfg.dff];
+        Self {
+            grams: slot_dim
+                .iter()
+                .map(|&d| (0..cfg.layers).map(|_| MatF::zeros(d, d)).collect())
+                .collect(),
+            absmean: slot_dim.iter().map(|&d| vec![vec![0.0; d]; cfg.layers]).collect(),
+            tokens: 0,
+        }
+    }
+
+    /// Accumulate one projection-input vector into (slot, layer).
+    fn record(&mut self, slot: usize, layer: usize, x: &[f32]) {
+        let d = x.len();
+        let g = &mut self.grams[slot][layer];
+        debug_assert_eq!(g.rows, d);
+        for i in 0..d {
+            let xi = x[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &mut g.data[i * d..(i + 1) * d];
+            for (j, rj) in row.iter_mut().enumerate() {
+                *rj += xi * x[j] as f64;
+            }
+        }
+        let am = &mut self.absmean[slot][layer];
+        for i in 0..d {
+            am[i] += x[i].abs() as f64;
+        }
+    }
+}
+
+/// Run the reference forward over one `[batch, seq]` token window while
+/// accumulating calibration statistics into `sums` (the artifact-free twin
+/// of streaming a batch through the AOT `calib` artifact).
+pub fn accumulate_calib(
+    w: &Weights,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    sums: &mut CalibSums,
+) {
+    // the AOT calib artifact embeds the full [B, S] window (no next-token
+    // trim), so statistics cover all `seq` positions — mirror that exactly
+    let _ = forward_hidden_obs(w, tokens, batch, seq, seq, Some(sums));
+    sums.tokens += batch * seq;
+}
 
 /// Per-token NLL for a [batch, seq] token matrix; returns [batch, seq-1].
 pub fn nll(w: &Weights, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
@@ -51,6 +123,19 @@ pub fn forward_hidden(
     seq: usize,
     t: usize,
 ) -> Vec<f32> {
+    forward_hidden_obs(w, tokens, batch, seq, t, None)
+}
+
+/// Forward with an optional calibration observer hooked on the inputs of
+/// every compressible projection.
+fn forward_hidden_obs(
+    w: &Weights,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    t: usize,
+    mut sums: Option<&mut CalibSums>,
+) -> Vec<f32> {
     let cfg = w.config;
     let d = cfg.d;
     let embed = w.by_name("embed");
@@ -64,8 +149,8 @@ pub fn forward_hidden(
     }
     let (cos, sin) = rope_tables(t, cfg.head_dim());
     for l in 0..cfg.layers {
-        attention_block(w, &mut x, batch, t, l, &cos, &sin);
-        mlp_block(w, &mut x, batch, t, l);
+        attention_block(w, &mut x, batch, t, l, &cos, &sin, sums.as_deref_mut());
+        mlp_block(w, &mut x, batch, t, l, sums.as_deref_mut());
     }
     // final rmsnorm
     let fnorm = &w.by_name("final_norm").data;
@@ -132,6 +217,7 @@ fn matvec_add(x: &[f32], w: &[f32], d_out: usize, y: &mut [f32]) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn attention_block(
     w: &Weights,
     x: &mut [f32],
@@ -140,6 +226,7 @@ fn attention_block(
     l: usize,
     cos: &[f32],
     sin: &[f32],
+    mut sums: Option<&mut CalibSums>,
 ) {
     let cfg = w.config;
     let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
@@ -161,6 +248,9 @@ fn attention_block(
         for pos in 0..t {
             let row = &x[(b * t + pos) * d..(b * t + pos + 1) * d];
             rmsnorm(row, an, &mut xn);
+            if let Some(s) = sums.as_deref_mut() {
+                s.record(SLOT_ATTN, l, &xn);
+            }
             matvec_add(&xn, wq, d, &mut q[pos * d..(pos + 1) * d]);
             matvec_add(&xn, wk, kvd, &mut k[pos * kvd..(pos + 1) * kvd]);
             matvec_add(&xn, wv, kvd, &mut v[pos * kvd..(pos + 1) * kvd]);
@@ -208,6 +298,9 @@ fn attention_block(
         // output projection + residual
         for pos in 0..t {
             let row = &mut x[(b * t + pos) * d..(b * t + pos + 1) * d];
+            if let Some(s) = sums.as_deref_mut() {
+                s.record(SLOT_O, l, &attn[pos * d..(pos + 1) * d]);
+            }
             let mut o = vec![0.0f32; d];
             matvec_add(&attn[pos * d..(pos + 1) * d], wo, d, &mut o);
             for i in 0..d {
@@ -217,7 +310,14 @@ fn attention_block(
     }
 }
 
-fn mlp_block(w: &Weights, x: &mut [f32], batch: usize, t: usize, l: usize) {
+fn mlp_block(
+    w: &Weights,
+    x: &mut [f32],
+    batch: usize,
+    t: usize,
+    l: usize,
+    mut sums: Option<&mut CalibSums>,
+) {
     let cfg = w.config;
     let (d, dff) = (cfg.d, cfg.dff);
     let mn = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
@@ -230,6 +330,9 @@ fn mlp_block(w: &Weights, x: &mut [f32], batch: usize, t: usize, l: usize) {
     for bt in 0..batch * t {
         let row = &mut x[bt * d..(bt + 1) * d];
         rmsnorm(row, mn, &mut xn);
+        if let Some(s) = sums.as_deref_mut() {
+            s.record(SLOT_MLP, l, &xn);
+        }
         g.iter_mut().for_each(|x| *x = 0.0);
         u.iter_mut().for_each(|x| *x = 0.0);
         matvec_add(&xn, wg, dff, &mut g);
@@ -238,6 +341,9 @@ fn mlp_block(w: &Weights, x: &mut [f32], batch: usize, t: usize, l: usize) {
             // silu(g) * u
             let s = g[i] / (1.0 + (-g[i]).exp());
             g[i] = s * u[i];
+        }
+        if let Some(s) = sums.as_deref_mut() {
+            s.record(SLOT_DOWN, l, &g);
         }
         let mut o = vec![0.0f32; d];
         matvec_add(&g, wd, d, &mut o);
@@ -285,6 +391,30 @@ mod tests {
             assert!((a[pos] - c[pos]).abs() < 1e-5, "pos {pos}");
         }
         assert!((a[t - 1] - c[t - 1]).abs() > 1e-7); // target changed
+    }
+
+    #[test]
+    fn calib_sums_are_symmetric_and_positive() {
+        let (w, toks, b, s) = setup();
+        let mut sums = CalibSums::new(&w.config);
+        accumulate_calib(&w, &toks, b, s, &mut sums);
+        accumulate_calib(&w, &toks, b, s, &mut sums);
+        assert_eq!(sums.tokens, 2 * b * s);
+        for slot in 0..4 {
+            let g = &sums.grams[slot][0];
+            for i in 0..g.rows {
+                assert!(g.at(i, i) >= 0.0);
+                for j in 0..g.cols {
+                    assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-6, "slot {slot} ({i},{j})");
+                }
+            }
+        }
+        assert_eq!(sums.grams[3][0].rows, w.config.dff);
+        assert!(sums.absmean[0][0].iter().all(|&v| v >= 0.0));
+        // the observer must not perturb the forward itself
+        let plain = nll(&w, &toks, b, s);
+        let again = nll(&w, &toks, b, s);
+        assert_eq!(plain, again);
     }
 
     #[test]

@@ -295,6 +295,25 @@ pub fn ckpt_path(model: &str) -> String {
     format!("runs/{model}/model.bin")
 }
 
+/// Load a logical model's checkpoint; when `init_if_missing`, fall back to
+/// random-init weights if no checkpoint *file* exists. A checkpoint that
+/// exists but fails to parse is always a hard error — corruption must
+/// never be silently replaced with random weights.
+pub fn load_or_init(model: &str, init_if_missing: bool) -> Result<Weights> {
+    let path = ckpt_path(model);
+    if std::path::Path::new(&path).exists() {
+        let (w, step) = Weights::load(&path)?;
+        eprintln!("loaded {path} (step {step})");
+        return Ok(w);
+    }
+    if init_if_missing {
+        let (cfg, seed) = logical_model(model)?;
+        eprintln!("no checkpoint at {path}; using random-init '{}' weights", cfg.name);
+        return Ok(Weights::init(cfg, seed));
+    }
+    bail!("no checkpoint for '{model}' — run `drank train --model {model}` first")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

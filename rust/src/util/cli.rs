@@ -60,6 +60,18 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Present-and-parseable value, else `None` (for truly optional knobs
+    /// like `--deadline-ms` where absence means "disabled").
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// `--key <ms>` as a `Duration` (serving knobs: batch windows,
+    /// deadlines).
+    pub fn duration_ms_or(&self, key: &str, default_ms: u64) -> std::time::Duration {
+        std::time::Duration::from_millis(self.u64_or(key, default_ms))
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -98,6 +110,16 @@ mod tests {
         let a = parse("--ratios 0.2,0.3,0.4");
         assert_eq!(a.list_or("ratios", ""), vec!["0.2", "0.3", "0.4"]);
         assert_eq!(a.list_or("other", "x,y"), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn optional_and_duration_values() {
+        let a = parse("--workers 4 --batch-window-ms 7 --deadline-ms 250");
+        assert_eq!(a.usize_or("workers", 1), 4);
+        assert_eq!(a.duration_ms_or("batch-window-ms", 2).as_millis(), 7);
+        assert_eq!(a.duration_ms_or("missing-ms", 2).as_millis(), 2);
+        assert_eq!(a.opt_usize("deadline-ms"), Some(250));
+        assert_eq!(a.opt_usize("absent"), None);
     }
 
     #[test]

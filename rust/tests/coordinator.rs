@@ -1,0 +1,431 @@
+//! Coordinator test suite over the pure-Rust reference backend.
+//!
+//! Everything here runs with **no** `artifacts/` directory and no PJRT —
+//! the `ScoreBackend` seam lets the multi-worker server be pinned against
+//! `model::fwd` directly: batch-window fill behavior, padding of short
+//! requests, per-request NLL slice lengths, typed rejection
+//! (`TooLong`/`QueueFull`/`Timeout`), drain-on-shutdown, worker scaling,
+//! and the per-worker metric breakdowns.
+
+use std::time::Duration;
+
+use drank::coordinator::{RefBackend, ScoreBackend, ScoreError, Server, ServerOpts};
+use drank::model::{fwd, ModelConfig, Weights};
+
+const SEED: u64 = 42;
+
+fn tiny() -> (ModelConfig, Weights) {
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    (cfg, Weights::init(cfg, SEED))
+}
+
+/// Reference-backend server over tiny weights; `tweak` adjusts the opts.
+fn ref_server(workers: usize, tweak: impl FnOnce(&mut ServerOpts)) -> (ModelConfig, Server) {
+    let (cfg, w) = tiny();
+    let mut opts = ServerOpts { workers, ..Default::default() };
+    tweak(&mut opts);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let w = std::sync::Arc::new(w);
+    let server = Server::spawn(move || Ok(RefBackend::shared(w.clone(), b, s)), opts);
+    (cfg, server)
+}
+
+/// Deterministic slow backend: fixed service time per batch, zero NLL.
+/// Sleep-based service makes the concurrency tests robust to machine load.
+struct SlowBackend {
+    delay: Duration,
+    batch: usize,
+    seq: usize,
+}
+
+impl ScoreBackend for SlowBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn nll(&self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0.5; (tokens.len() / self.seq) * (self.seq - 1)])
+    }
+
+    fn nll_window(&self, _tokens: &[i32], rows: usize, used_seq: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0.5; rows * (used_seq - 1)])
+    }
+}
+
+#[test]
+fn responses_match_reference_forward() {
+    let (cfg, server) = ref_server(2, |_| {});
+    let mut rng = drank::util::rng::Rng::new(7);
+    let rows: Vec<Vec<u32>> = (0..6)
+        .map(|_| (0..cfg.seq).map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+    let handles: Vec<_> = rows
+        .iter()
+        .cloned()
+        .map(|r| {
+            let c = server.client();
+            std::thread::spawn(move || c.score(r).unwrap())
+        })
+        .collect();
+    let resps: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let w = Weights::init(cfg, SEED);
+    for (row, resp) in rows.iter().zip(&resps) {
+        assert_eq!(resp.nll.len(), cfg.seq - 1);
+        let toks: Vec<i32> = row.iter().map(|&t| t as i32).collect();
+        let want = fwd::nll(&w, &toks, 1, cfg.seq);
+        for (a, b) in resp.nll.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "server vs direct forward: {a} vs {b}");
+        }
+        assert!(resp.worker < 2);
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 6);
+    assert_eq!(m.tokens, 6 * cfg.seq);
+}
+
+#[test]
+fn short_requests_are_zero_padded() {
+    let (cfg, server) = ref_server(1, |_| {});
+    let client = server.client();
+    let len = cfg.seq / 2;
+    let toks: Vec<u32> = (1..=len as u32).collect();
+    let resp = client.score(toks.clone()).unwrap();
+    // the NLL slice covers only the request's own tokens
+    assert_eq!(resp.nll.len(), len - 1);
+    // and matches the reference forward over the zero-padded row
+    let mut padded = vec![0i32; cfg.seq];
+    for (i, &t) in toks.iter().enumerate() {
+        padded[i] = t as i32;
+    }
+    let w = Weights::init(cfg, SEED);
+    let want = fwd::nll(&w, &padded, 1, cfg.seq);
+    for i in 0..len - 1 {
+        assert!((resp.nll[i] - want[i]).abs() < 1e-5, "position {i}");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.tokens, len);
+    // the executed window shrank to the request's own length: no waste
+    assert_eq!(m.padded_tokens, len);
+    assert!((m.padding_efficiency() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn mixed_length_batch_pads_to_longest() {
+    let (_cfg, server) = ref_server(1, |o| {
+        o.batch_window = Duration::from_millis(150);
+        o.bucket_by_length = false;
+    });
+    let lens = [4usize, 16];
+    let handles: Vec<_> = lens
+        .iter()
+        .map(|&len| {
+            let c = server.client();
+            std::thread::spawn(move || c.score(vec![1; len]).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.tokens, 20);
+    if m.batches == 1 {
+        // one batch: both rows padded to the longest request
+        assert_eq!(m.padded_tokens, 2 * 16);
+        assert!((m.padding_efficiency() - 20.0 / 32.0).abs() < 1e-9);
+    } else {
+        // scheduling split them: each window shrank to its own request
+        assert_eq!(m.padded_tokens, m.tokens);
+    }
+}
+
+#[test]
+fn per_request_nll_slice_lengths() {
+    let (cfg, server) = ref_server(1, |o| o.batch_window = Duration::from_millis(20));
+    let lens = [2usize, 3, cfg.seq / 2, cfg.seq];
+    let handles: Vec<_> = lens
+        .iter()
+        .map(|&len| {
+            let c = server.client();
+            std::thread::spawn(move || (len, c.score(vec![1; len]).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (len, resp) = h.join().unwrap();
+        assert_eq!(resp.nll.len(), len - 1, "request of {len} tokens");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.tokens, lens.iter().sum::<usize>());
+    assert!(m.padded_tokens >= m.tokens);
+}
+
+#[test]
+fn overlength_requests_rejected_not_truncated() {
+    // regression: the old worker clipped over-length requests with
+    // take(seq) and billed min(len, seq) tokens — now a typed rejection
+    let (cfg, server) = ref_server(1, |_| {});
+    let client = server.client();
+    match client.score(vec![1; cfg.seq + 5]) {
+        Err(ScoreError::TooLong { len, seq }) => {
+            assert_eq!(len, cfg.seq + 5);
+            assert_eq!(seq, cfg.seq);
+        }
+        other => panic!("expected TooLong, got {other:?}"),
+    }
+    // the worker keeps serving after a rejection
+    let ok = client.score(vec![1, 2, 3]).unwrap();
+    assert_eq!(ok.nll.len(), 2);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.rejected_too_long, 1);
+    assert_eq!(m.requests, 1); // the rejected request was never billed
+    assert_eq!(m.tokens, 3);
+}
+
+#[test]
+fn out_of_vocab_token_rejected_per_request() {
+    // regression: an out-of-range token id must produce a typed rejection,
+    // not panic the worker (which would take the whole server down)
+    let (cfg, server) = ref_server(1, |_| {});
+    let client = server.client();
+    let bad = cfg.vocab as u32 + 7;
+    match client.score(vec![1, bad, 3]) {
+        Err(ScoreError::InvalidToken { id, vocab }) => {
+            assert_eq!(id, bad);
+            assert_eq!(vocab, cfg.vocab);
+        }
+        other => panic!("expected InvalidToken, got {other:?}"),
+    }
+    // the server keeps serving after the rejection
+    let ok = client.score(vec![1, 2, 3]).unwrap();
+    assert_eq!(ok.nll.len(), 2);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.rejected_invalid_token, 1);
+    assert_eq!(m.rejected(), 1);
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn try_score_rejects_when_queue_saturated() {
+    let opts = ServerOpts {
+        workers: 1,
+        queue: 1,
+        batch_window: Duration::from_millis(0),
+        ..Default::default()
+    };
+    let server = Server::spawn(
+        move || Ok(SlowBackend { delay: Duration::from_millis(300), batch: 1, seq: 8 }),
+        opts,
+    );
+    let c1 = server.client();
+    let h1 = std::thread::spawn(move || c1.score(vec![1, 2, 3]).unwrap());
+    std::thread::sleep(Duration::from_millis(100)); // worker now inside the backend
+    let c2 = server.client();
+    let h2 = std::thread::spawn(move || c2.score(vec![1, 2, 3]).unwrap());
+    std::thread::sleep(Duration::from_millis(50)); // second request fills the 1-slot queue
+    let c3 = server.client();
+    match c3.try_score(vec![1, 2, 3]) {
+        Err(ScoreError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    h1.join().unwrap();
+    h2.join().unwrap();
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.rejected_queue_full, 1);
+    assert_eq!(m.requests, 2);
+}
+
+#[test]
+fn queued_deadline_produces_timeout() {
+    let opts = ServerOpts {
+        workers: 1,
+        batch_window: Duration::from_millis(0),
+        deadline: Some(Duration::from_millis(40)),
+        ..Default::default()
+    };
+    let server = Server::spawn(
+        move || Ok(SlowBackend { delay: Duration::from_millis(150), batch: 1, seq: 8 }),
+        opts,
+    );
+    let c1 = server.client();
+    let h1 = std::thread::spawn(move || c1.score(vec![1, 2]).unwrap());
+    std::thread::sleep(Duration::from_millis(30)); // worker busy for ~150ms
+    let c2 = server.client();
+    let h2 = std::thread::spawn(move || c2.score(vec![1, 2]));
+    h1.join().unwrap();
+    let r2 = h2.join().unwrap();
+    assert!(matches!(r2, Err(ScoreError::Timeout)), "got {r2:?}");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.rejected_timeout, 1);
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let opts = ServerOpts {
+        workers: 1,
+        queue: 16,
+        batch_window: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::spawn(
+        move || Ok(SlowBackend { delay: Duration::from_millis(50), batch: 2, seq: 8 }),
+        opts,
+    );
+    let mut handles = Vec::new();
+    for i in 0..6u32 {
+        let c = server.client();
+        handles.push(std::thread::spawn(move || c.score(vec![1 + i, 2, 3]).unwrap()));
+    }
+    std::thread::sleep(Duration::from_millis(120)); // backlog queued, worker mid-batch
+    let m = server.shutdown().unwrap(); // must drain before joining
+    assert_eq!(m.requests, 6, "shutdown dropped queued requests");
+    for h in handles {
+        h.join().unwrap(); // every client got a response
+    }
+}
+
+#[test]
+fn batch_window_fills_batches() {
+    let (cfg, server) = ref_server(1, |o| o.batch_window = Duration::from_millis(100));
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let c = server.client();
+            let seq = cfg.seq;
+            std::thread::spawn(move || c.score(vec![1; seq]).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 6);
+    // with a 100ms window and batch capacity 2, batching must have happened
+    assert!(m.batches < m.requests, "no batching: {} batches", m.batches);
+    assert!(m.mean_batch_occupancy() > 1.0);
+    // full-length requests waste no padding
+    assert_eq!(m.tokens, 6 * cfg.seq);
+    assert_eq!(m.padded_tokens, m.tokens);
+    assert!((m.padding_efficiency() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn per_worker_metrics_are_consistent() {
+    let (cfg, server) = ref_server(2, |o| o.batch_window = Duration::from_millis(10));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let c = server.client();
+            let seq = cfg.seq;
+            std::thread::spawn(move || c.score(vec![2; seq]).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.per_worker.len(), 2);
+    assert_eq!(m.per_worker.iter().map(|w| w.requests).sum::<usize>(), m.requests);
+    assert_eq!(m.per_worker.iter().map(|w| w.batches).sum::<usize>(), m.batches);
+    assert_eq!(m.per_worker.iter().map(|w| w.tokens).sum::<usize>(), m.tokens);
+    assert_eq!(m.queue_depth_samples, m.batches);
+    assert!(m.mean_queue_depth() >= 0.0);
+    assert!(m.utilization() > 0.0);
+}
+
+#[test]
+fn two_workers_outscale_one() {
+    // sleep-based service time makes scaling deterministic: with one
+    // worker 8 requests serialize (~8 * 30ms); with two they overlap
+    fn run(workers: usize) -> f64 {
+        let opts = ServerOpts {
+            workers,
+            queue: 64,
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let server = Server::spawn(
+            move || Ok(SlowBackend { delay: Duration::from_millis(30), batch: 1, seq: 8 }),
+            opts,
+        );
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = server.client();
+                std::thread::spawn(move || c.score(vec![1, 2, 3, 4]).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.shutdown().unwrap();
+        assert_eq!(m.requests, 8);
+        m.throughput_tps()
+    }
+    let t1 = run(1);
+    let t2 = run(2);
+    assert!(
+        t2 > t1 * 1.3,
+        "2 workers ({t2:.0} tok/s) should outscale 1 worker ({t1:.0} tok/s)"
+    );
+}
+
+/// Panics on every scoring call (a poisoned batch, an indexing bug, ...)
+/// after a short delay, so other requests can queue up behind the batch.
+struct PanicBackend;
+
+impl ScoreBackend for PanicBackend {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn seq(&self) -> usize {
+        8
+    }
+    fn nll(&self, _tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(80));
+        panic!("backend exploded")
+    }
+}
+
+#[test]
+fn worker_panic_does_not_hang_clients() {
+    let server = Server::spawn(
+        move || Ok(PanicBackend),
+        ServerOpts { workers: 1, ..Default::default() },
+    );
+    // first request: the worker panics executing it (reply channel drops)
+    let c1 = server.client();
+    let h1 = std::thread::spawn(move || c1.score(vec![1, 2, 3]));
+    std::thread::sleep(Duration::from_millis(30)); // worker inside the backend
+    // second request queues *behind* the doomed batch: the unwinding
+    // worker's guard must drain it, not strand its client in recv()
+    let c2 = server.client();
+    let h2 = std::thread::spawn(move || c2.score(vec![4, 5, 6]));
+    let r1 = h1.join().unwrap();
+    assert!(r1.is_err(), "got {r1:?}");
+    let r2 = h2.join().unwrap();
+    assert!(matches!(r2, Err(ScoreError::Shutdown)), "got {r2:?}");
+    // the guard also closed the queue: later calls fail fast
+    std::thread::sleep(Duration::from_millis(50));
+    let r3 = server.client().score(vec![1, 2, 3]);
+    assert!(matches!(r3, Err(ScoreError::Shutdown)), "got {r3:?}");
+    // and shutdown reports an error instead of re-panicking
+    assert!(server.shutdown().is_err());
+}
+
+#[test]
+fn backend_construction_failure_fails_cleanly() {
+    let opts = ServerOpts { workers: 1, ..Default::default() };
+    let server = Server::spawn(|| Err::<RefBackend, _>(anyhow::anyhow!("boom")), opts);
+    let client = server.client();
+    // no hang: the request is either drained with a Backend error or
+    // rejected because the failed worker closed the queue
+    let res = client.score(vec![1, 2, 3]);
+    assert!(res.is_err(), "got {res:?}");
+    let err = server.shutdown().unwrap_err();
+    assert!(format!("{err}").contains("boom"));
+}

@@ -4,6 +4,11 @@
 //! artifact, pure-Rust reference, runtime XlaBuilder graph); these tests
 //! pin all three to each other, then exercise the full compression →
 //! evaluation pipeline end to end on the tiny config.
+//!
+//! Everything here needs PJRT plus the `artifacts/` directory from
+//! `make artifacts`, so each test gates on engine availability and skips
+//! with a message on a bare checkout (InfiniLM-style NotFound => return).
+//! The artifact-free counterparts live in `coordinator.rs`/`pipeline.rs`.
 
 use drank::calib::{CalibOpts, CalibStats};
 use drank::compress::{methods, CompressOpts, Method};
@@ -12,6 +17,17 @@ use drank::graph;
 use drank::model::{fwd, ModelConfig, Weights};
 use drank::runtime::{lit_i32, Engine};
 use drank::util::rng::Rng;
+
+/// PJRT + artifacts, or skip the test with a visible message.
+fn engine_or_skip(test: &str) -> Option<Engine> {
+    match Engine::open("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping {test}: PJRT artifacts unavailable ({e})");
+            None
+        }
+    }
+}
 
 fn tiny_setup() -> (ModelConfig, Weights, Vec<i32>) {
     let cfg = ModelConfig::by_name("tiny").unwrap();
@@ -29,8 +45,10 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn artifact_matches_pure_rust_forward() {
+    let Some(engine) = engine_or_skip("artifact_matches_pure_rust_forward") else {
+        return;
+    };
     let (cfg, w, toks) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     engine.check_config(&cfg).unwrap();
     let mut inputs = engine.weight_literals(&w).unwrap();
     inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
@@ -45,8 +63,10 @@ fn artifact_matches_pure_rust_forward() {
 
 #[test]
 fn runtime_graph_matches_artifact() {
+    let Some(engine) = engine_or_skip("runtime_graph_matches_artifact") else {
+        return;
+    };
     let (cfg, w, toks) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let mut inputs = engine.weight_literals(&w).unwrap();
     inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
     let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
@@ -61,8 +81,10 @@ fn runtime_graph_matches_artifact() {
 #[test]
 fn compressed_graph_matches_reconstructed_dense() {
     // factored execution (x·B·C) must equal executing the reconstruction
+    let Some(engine) = engine_or_skip("compressed_graph_matches_reconstructed_dense") else {
+        return;
+    };
     let (cfg, w, toks) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let stats = CalibStats::synthetic(&cfg, 5);
     let opts = CompressOpts {
         method: Method::DRank,
@@ -88,13 +110,15 @@ fn compressed_graph_matches_reconstructed_dense() {
 
 #[test]
 fn gqa_graph_matches_pure_rust() {
+    let Some(engine) = engine_or_skip("gqa_graph_matches_pure_rust") else {
+        return;
+    };
     let cfg = ModelConfig::by_name("gqa").unwrap();
     let w = Weights::init(cfg, 9);
     let mut r = Rng::new(8);
     let toks: Vec<i32> = (0..cfg.batch * cfg.seq)
         .map(|_| r.below(cfg.vocab) as i32)
         .collect();
-    let engine = Engine::open("artifacts").unwrap();
     let compiled = graph::compile_dense(&engine.rt, &w, cfg.batch, cfg.seq).unwrap();
     let graph_nll = compiled.nll(&toks).unwrap();
     let rust_nll = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
@@ -104,8 +128,10 @@ fn gqa_graph_matches_pure_rust() {
 
 #[test]
 fn calibration_gram_is_symmetric_psd() {
+    let Some(engine) = engine_or_skip("calibration_gram_is_symmetric_psd") else {
+        return;
+    };
     let (cfg, w, _) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let data = DataBundle::build(cfg.vocab, 3, 0.02);
     let copts = CalibOpts { batches: 2, ..Default::default() };
     let stats = drank::calib::run(&engine, &w, &data, &copts).unwrap();
@@ -125,8 +151,10 @@ fn calibration_gram_is_symmetric_psd() {
 #[test]
 fn coordinator_serves_correct_nll() {
     // server responses must match a direct artifact evaluation
+    let Some(engine) = engine_or_skip("coordinator_serves_correct_nll") else {
+        return;
+    };
     let (cfg, w, toks) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let mut inputs = engine.weight_literals(&w).unwrap();
     inputs.push(lit_i32(&toks, &[cfg.batch, cfg.seq]).unwrap());
     let outs = engine.exec(cfg.name, "dense_nll", &inputs).unwrap();
@@ -167,8 +195,10 @@ fn coordinator_serves_correct_nll() {
 #[test]
 fn lowrank_artifact_matches_dense_reconstruction() {
     // the Pallas lowrank kernel path (padded factors) == dense execution
+    let Some(engine) = engine_or_skip("lowrank_artifact_matches_dense_reconstruction") else {
+        return;
+    };
     let (cfg, w, toks) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     if !engine.has(cfg.name, "lowrank_nll") {
         return;
     }
@@ -202,8 +232,10 @@ fn lowrank_artifact_matches_dense_reconstruction() {
 fn sequential_compensation_pipeline_runs() {
     // §4.1 path: blocks compressed front-to-back with recalibration against
     // the compressed prefix; must hit the target ratio and stay finite
+    let Some(engine) = engine_or_skip("sequential_compensation_pipeline_runs") else {
+        return;
+    };
     let (cfg, w, _) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let data = DataBundle::build_cached(cfg.vocab, 1234, 1.0);
     let copts = CalibOpts { batches: 2, ..Default::default() };
     // n=1 so the tiny 2-layer model has two compensation blocks (with n=2
@@ -244,7 +276,9 @@ fn sequential_compensation_pipeline_runs() {
 fn zero_shot_scoring_end_to_end_tiny() {
     // full task pipeline on a briefly-trained tiny model: accuracy must be
     // a valid probability and the easy suite must beat chance
-    let engine = Engine::open("artifacts").unwrap();
+    let Some(engine) = engine_or_skip("zero_shot_scoring_end_to_end_tiny") else {
+        return;
+    };
     let data = DataBundle::build_cached(256, 1234, 1.0);
     let opts = drank::runtime::trainer::TrainOpts { steps: 60, ..Default::default() };
     let cfg = ModelConfig::by_name("tiny").unwrap();
@@ -268,8 +302,10 @@ fn zero_shot_scoring_end_to_end_tiny() {
 
 #[test]
 fn train_step_reduces_loss_tiny() {
+    let Some(engine) = engine_or_skip("train_step_reduces_loss_tiny") else {
+        return;
+    };
     let (cfg, w, _) = tiny_setup();
-    let engine = Engine::open("artifacts").unwrap();
     let data = DataBundle::build(cfg.vocab, 4, 0.02);
     let opts = drank::runtime::trainer::TrainOpts {
         steps: 12,

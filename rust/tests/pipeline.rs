@@ -1,0 +1,145 @@
+//! Compression-pipeline tests over the pure-Rust reference calibration —
+//! the compensated (§4.1) path included — with **no** `artifacts/`
+//! directory and no PJRT (the recalibration seam in `compress::pipeline`).
+
+use drank::calib::{self, CalibOpts};
+use drank::compress::{methods, pipeline, CompressOpts, Method};
+use drank::data::DataBundle;
+use drank::model::lowrank::TypeRep;
+use drank::model::{ModelConfig, Weights, COMPRESSIBLE};
+
+fn setup() -> (ModelConfig, Weights, DataBundle) {
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    (cfg, Weights::init(cfg, 42), DataBundle::build(cfg.vocab, 3, 0.02))
+}
+
+#[test]
+fn reference_calibration_stats_are_sane() {
+    let (cfg, w, data) = setup();
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    let stats = calib::run_reference(&w, &data, &copts).unwrap();
+    assert_eq!(stats.tokens, 2 * cfg.batch * cfg.seq);
+    let g = stats.gram("wq", 0);
+    assert_eq!(g.rows, cfg.d);
+    for i in 0..cfg.d {
+        assert!(g.at(i, i) >= 0.0);
+        for j in 0..cfg.d {
+            assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-9, "asymmetric at ({i},{j})");
+        }
+    }
+    let diag_mean: f64 = (0..cfg.d).map(|i| g.at(i, i)).sum::<f64>() / cfg.d as f64;
+    assert!(diag_mean > 0.0);
+    // the w_down slot carries dff-dimensional inputs
+    assert_eq!(stats.gram("w_down", cfg.layers - 1).rows, cfg.dff);
+    assert!(stats.absmean("wq", 0).iter().all(|&v| v >= 0.0));
+    // fisher is artifact-only: absent here, and requesting it is an error
+    assert!(stats.fisher_rows("wq", 0).is_none());
+    let fopts = CalibOpts { batches: 1, fisher: true, ..Default::default() };
+    assert!(calib::run_reference(&w, &data, &fopts).is_err());
+}
+
+#[test]
+fn compensated_reference_pipeline_tiny() {
+    let (cfg, w, data) = setup();
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    // n=1 so the tiny 2-layer model has two compensation blocks
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.4,
+        group_layers: 1,
+        compensate: true,
+        ..Default::default()
+    };
+    let (model, plan) = pipeline::compress_model_reference(&w, &data, &copts, &opts).unwrap();
+    assert_eq!(plan.len(), 7);
+    assert!(
+        (model.achieved_ratio() - 0.4).abs() < 0.06,
+        "achieved {}",
+        model.achieved_ratio()
+    );
+    // every factored group: finite factors + the factoring guard holds
+    let mut factored_groups = 0;
+    for typ in COMPRESSIBLE {
+        let (d1, d2) = cfg.matrix_dims(typ);
+        if let TypeRep::Factored(groups) = &model.reps[typ] {
+            for g in groups {
+                factored_groups += 1;
+                let (k, glen) = (g.rank(), g.n_layers());
+                assert!(
+                    k * (d1 + glen * d2) < glen * d1 * d2,
+                    "{typ}: rank {k} over group of {glen} is not worth factoring"
+                );
+                assert!(g.b.data.iter().all(|x| x.is_finite()), "{typ}: non-finite basis");
+                for c in &g.cs {
+                    assert!(c.data.iter().all(|x| x.is_finite()), "{typ}: non-finite coeffs");
+                }
+            }
+        }
+    }
+    assert!(factored_groups > 0, "nothing was factored at 40%");
+    // compensation recalibrated: late layers differ from the uncompensated run
+    let opts2 = CompressOpts { compensate: false, ..opts.clone() };
+    let (model2, _) = pipeline::compress_model_reference(&w, &data, &copts, &opts2).unwrap();
+    let a = model.to_dense();
+    let b = model2.to_dense();
+    let la = a.by_name("wq").layer_mat(cfg.layers - 1);
+    let lb = b.by_name("wq").layer_mat(cfg.layers - 1);
+    let d: f32 = la
+        .data
+        .iter()
+        .zip(&lb.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 0.0, "compensation had no effect on the last layer");
+}
+
+#[test]
+fn uncompensated_pipeline_matches_direct_compress() {
+    // compensate=false must be exactly the plain calibrate-then-compress
+    // path (the seam adds no behavior change)
+    let (_cfg, w, data) = setup();
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.3,
+        group_layers: 2,
+        compensate: false,
+        ..Default::default()
+    };
+    let (m1, p1) = pipeline::compress_model_reference(&w, &data, &copts, &opts).unwrap();
+    let stats = calib::run_reference(&w, &data, &copts).unwrap();
+    let (m2, p2) = methods::compress(&w, &stats, &opts).unwrap();
+    assert_eq!(p1, p2, "rank plans diverged");
+    let (a, b) = (m1.to_dense(), m2.to_dense());
+    for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!(ta.data, tb.data, "dense reconstructions diverged");
+    }
+}
+
+#[test]
+fn compensated_seam_accepts_custom_recalibration() {
+    // the recalibration provider is pluggable: count invocations and feed
+    // synthetic stats — the §4.1 loop must call it once per block after
+    // the first (tiny with n=1 has 2 blocks -> exactly 1 recalibration)
+    let (cfg, w, data) = setup();
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    let stats0 = calib::run_reference(&w, &data, &copts).unwrap();
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.4,
+        group_layers: 1,
+        compensate: true,
+        ..Default::default()
+    };
+    let mut calls = 0usize;
+    let (model, _) = pipeline::compensated_with(&w, stats0, &opts, |dense| {
+        calls += 1;
+        // the prefix handed back must be a real partially-compressed model
+        assert_eq!(dense.config.name, cfg.name);
+        calib::run_reference(dense, &data, &copts)
+    })
+    .unwrap();
+    // n=1 => one block per layer => layers-1 recalibrations
+    assert_eq!(calls, cfg.layers - 1, "one recalibration per later block");
+    assert!(model.achieved_ratio() > 0.3);
+}

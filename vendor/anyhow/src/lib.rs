@@ -1,0 +1,147 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! implements exactly the subset drank uses: `Error`, `Result`, the
+//! `anyhow!` / `bail!` / `ensure!` macros, and the `Context` extension
+//! trait. Error values carry a human-readable context chain (outermost
+//! message first, like real anyhow's Display/Debug split).
+
+use std::fmt;
+
+/// A string-chained error value. `Display` shows the outermost context;
+/// `Debug` shows the whole chain (what `.unwrap()` prints).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The full chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // keep one level of the std source chain for diagnostics
+        match e.source() {
+            Some(s) => Error { msg: e.to_string(), cause: Some(Box::new(Error::msg(s))) },
+            None => Error::msg(e.to_string()),
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::Error::msg(format!($($t)*)) };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 42)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(e.chain(), vec!["outer", "root cause 42"]);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root cause 42"));
+    }
+
+    #[test]
+    fn ensure_and_from_std() {
+        fn check(x: usize) -> Result<usize> {
+            ensure!(x > 2, "x too small: {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_err());
+        assert_eq!(check(3).unwrap(), 3);
+        let io = std::fs::read("/definitely/not/a/file");
+        let e: Error = io.unwrap_err().into();
+        assert!(!format!("{e}").is_empty());
+    }
+}
