@@ -26,6 +26,13 @@ pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Size the compression thread pool from `--threads` / `DRANK_THREADS`
+/// (same resolution as the `drank` CLI). Call once at bench start.
+pub fn init_threads() {
+    let args = drank::util::cli::Args::from_env();
+    drank::util::parallel::set_threads(args.threads_or_default());
+}
+
 pub fn fast() -> bool {
     std::env::var("DRANK_FAST").map(|v| v == "1").unwrap_or(false)
 }
@@ -50,6 +57,7 @@ pub struct Bench {
 
 /// Load everything a bench needs for a logical model.
 pub fn setup(model: &str) -> Bench {
+    init_threads();
     let engine = Engine::open("artifacts").expect("run `make artifacts` first");
     let (weights, step) = Weights::load(&ckpt_path(model)).unwrap_or_else(|_| {
         panic!("no checkpoint for '{model}' — run `./target/release/drank train --model {model}` first")

@@ -2,19 +2,40 @@
 //! serving sides. Used for the EXPERIMENTS.md §Perf before/after log.
 //!
 //! Own harness (criterion is unavailable offline): median of N timed
-//! repetitions after a warmup, reported in a table.
+//! repetitions after a warmup, reported in a table. Three sections:
+//!
+//!  1. single-thread hot-path rows (the historical table),
+//!  2. thread-scaling rows — the same op at 1 vs 4 threads, asserting the
+//!     outputs are byte-identical while reporting the speedup,
+//!  3. a per-stage `CompressProfile` of a full artifact-free compression
+//!     run on the `tiny` config.
+//!
+//! Everything is folded into `runs/reports/BENCH_perf_hotpath.json` (the
+//! bench trajectory artifact CI uploads) and gated against the checked-in
+//! baseline `rust/benches/baselines/BENCH_perf_hotpath.json`: any op slower
+//! than 3x its baseline fails the bench. `DRANK_PERF_BASELINE` overrides
+//! the baseline path. `DRANK_FAST=1` lowers repetition counts only — sizes
+//! stay fixed so timings remain comparable against the baseline.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use drank::calib::{CalibOpts, CalibStats};
+use drank::compress::methods::all_type_svds;
 use drank::compress::whiten::Whitener;
+use drank::compress::{pipeline, Method};
+use drank::data::synlang::Domain;
+use drank::data::DataBundle;
 use drank::linalg::svd::svd;
 use drank::linalg::{cholesky_jitter, effective_rank};
+use drank::model::{ModelConfig, Weights};
 use drank::report::Table;
 use drank::tensor::matmul::{matmul_f32, matmul_f64};
 use drank::tensor::{Mat32, MatF};
+use drank::util::json::Json;
+use drank::util::parallel::{set_threads, threads};
 use drank::util::rng::Rng;
-use drank::util::Timer;
+use drank::util::{profile, Timer};
 
 fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     f(); // warmup
@@ -32,15 +53,29 @@ fn randf(rng: &mut Rng, r: usize, c: usize) -> MatF {
     MatF::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
 }
 
+/// Time `op` at 1 and 4 threads; returns (t1_ms, t4_ms).
+fn scale_pair<F: FnMut()>(mut op: F, reps: usize) -> (f64, f64) {
+    set_threads(1);
+    let t1 = median_time(&mut op, reps);
+    set_threads(4);
+    let t4 = median_time(&mut op, reps);
+    (t1, t4)
+}
+
 fn main() {
+    common::init_threads();
+    let configured = threads();
+    let reps = if common::fast() { 3 } else { 5 };
     let mut rng = Rng::new(0);
     let mut t = Table::new("perf: hot paths", &["op", "size", "median ms", "notes"]);
+    // (name, t1_ms, t4_ms) rows for the JSON trajectory + regression gate
+    let mut ops: Vec<(String, f64, f64)> = Vec::new();
 
     // f64 GEMM (whitening path)
     for &n in &[192usize, 512] {
         let a = randf(&mut rng, n, n);
         let b = randf(&mut rng, n, n);
-        let ms = median_time(|| { let _ = matmul_f64(&a, &b); }, 5);
+        let ms = median_time(|| { let _ = matmul_f64(&a, &b); }, reps);
         let gflops = 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
         t.row(vec![
             "matmul_f64".into(),
@@ -54,7 +89,7 @@ fn main() {
         let n = 512;
         let a32 = Mat32::from_vec(n, n, (0..n * n).map(|i| (i % 13) as f32).collect());
         let b32 = a32.clone();
-        let ms = median_time(|| { let _ = matmul_f32(&a32, &b32); }, 5);
+        let ms = median_time(|| { let _ = matmul_f32(&a32, &b32); }, reps);
         let gflops = 2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9;
         t.row(vec![
             "matmul_f32".into(),
@@ -75,11 +110,11 @@ fn main() {
         let x = randf(&mut rng, n + 32, n);
         let mut g = x.t_matmul(&x);
         g.scale(1.0 / (n + 32) as f64);
-        let ms = median_time(|| { let _ = cholesky_jitter(&g); }, 5);
+        let ms = median_time(|| { let _ = cholesky_jitter(&g); }, reps);
         t.row(vec!["cholesky".into(), format!("{n}x{n}"), format!("{ms:.2}"), "".into()]);
         let wh = Whitener::from_gram(&g);
         let w = randf(&mut rng, n, 192);
-        let ms = median_time(|| { let _ = wh.unapply(&wh.apply(&w)); }, 5);
+        let ms = median_time(|| { let _ = wh.unapply(&wh.apply(&w)); }, reps);
         t.row(vec!["whiten+unwhiten".into(), format!("{n}x192"), format!("{ms:.2}"), "".into()]);
     }
     // effective rank
@@ -89,12 +124,93 @@ fn main() {
         t.row(vec!["effective_rank".into(), "512".into(), format!("{ms:.4}"), "".into()]);
     }
 
+    // thread scaling: same op at 1 vs 4 threads, byte-identical outputs
+    {
+        let n = 512;
+        let a = randf(&mut rng, n, n);
+        let b = randf(&mut rng, n, n);
+        set_threads(1);
+        let want64 = matmul_f64(&a, &b);
+        set_threads(4);
+        assert_eq!(matmul_f64(&a, &b).data, want64.data, "matmul_f64 not thread-invariant");
+        let (t1, t4) = scale_pair(|| { let _ = matmul_f64(&a, &b); }, reps);
+        t.row(vec![
+            "matmul_f64".into(),
+            format!("{n}x{n}x{n} @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("matmul_f64_512".into(), t1, t4));
+
+        let a32 = a.to_f32();
+        let b32 = b.to_f32();
+        set_threads(1);
+        let want32 = matmul_f32(&a32, &b32);
+        set_threads(4);
+        assert_eq!(matmul_f32(&a32, &b32).data, want32.data, "matmul_f32 not thread-invariant");
+        let (t1, t4) = scale_pair(|| { let _ = matmul_f32(&a32, &b32); }, reps);
+        t.row(vec![
+            "matmul_f32".into(),
+            format!("{n}x{n}x{n} @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("matmul_f32_512".into(), t1, t4));
+
+        set_threads(1);
+        let want_t = a.t_matmul(&b);
+        set_threads(4);
+        assert_eq!(a.t_matmul(&b).data, want_t.data, "t_matmul not thread-invariant");
+        let (t1, t4) = scale_pair(|| { let _ = a.t_matmul(&b); }, reps);
+        t.row(vec![
+            "t_matmul".into(),
+            format!("{n}x{n} @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("t_matmul_512".into(), t1, t4));
+    }
+    // grouped SVD sweep (the planning phase of a full compress) on the `m`
+    // config with synthetic stats — no checkpoint or artifacts needed
+    {
+        let cfg = ModelConfig::by_name("m").unwrap();
+        let w = Weights::init(cfg, 11);
+        let stats = CalibStats::synthetic(&cfg, 12);
+        let o = common::opts(Method::DRank, 0.3, 2);
+        let (t1, t4) = scale_pair(|| { let _ = all_type_svds(&w, &stats, &o); }, 3);
+        t.row(vec![
+            "all_type_svds".into(),
+            "m, drank n=2 @1->4T".into(),
+            format!("{t1:.1} -> {t4:.1}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("all_type_svds_m".into(), t1, t4));
+    }
+    set_threads(configured);
+
+    // per-stage profile: artifact-free end-to-end compression on `tiny`
+    let prof = {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 7);
+        let data = DataBundle::build(cfg.vocab, 3, 0.02);
+        let copts = CalibOpts { batches: 4, ..Default::default() };
+        let o = common::opts(Method::DRank, 0.3, 2);
+        profile::reset();
+        let timer = Timer::start();
+        let (model, _) =
+            pipeline::compress_model_reference(&w, &data, &copts, &o).expect("ref compress");
+        let _ = model.to_dense(); // exercise the Reconstruct stage
+        let prof = profile::snapshot(timer.millis());
+        print!("{}", prof.render());
+        prof
+    };
+
     // end-to-end: compress (drank) + one PPL batch + graph compile+exec,
     // only if a checkpoint exists (perf bench also runs standalone pre-train)
     if std::path::Path::new("runs/m/model.bin").exists() {
         let b = common::setup("m");
-        let stats = b.calibrate(drank::data::synlang::Domain::Wiki2s, false);
-        let opts = common::opts(drank::compress::Method::DRank, 0.3, 2);
+        let stats = b.calibrate(Domain::Wiki2s, false);
+        let opts = common::opts(Method::DRank, 0.3, 2);
         let ms = median_time(
             || { let _ = drank::compress::methods::compress(&b.weights, &stats, &opts); },
             3,
@@ -126,4 +242,60 @@ fn main() {
     }
 
     common::emit(&t, "perf_hotpath");
+
+    // bench-trajectory JSON + regression gate
+    let ops_json = Json::Obj(
+        ops.iter()
+            .map(|(name, t1, t4)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("t1_ms", Json::num(*t1)),
+                        ("t4_ms", Json::num(*t4)),
+                        ("speedup", Json::num(t1 / t4.max(1e-9))),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let out = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("fast", Json::Bool(common::fast())),
+        ("threads_default", Json::num(configured as f64)),
+        ("ops", ops_json),
+        ("profile", prof.to_json()),
+    ]);
+    std::fs::create_dir_all("runs/reports").expect("mkdir runs/reports");
+    std::fs::write("runs/reports/BENCH_perf_hotpath.json", out.emit())
+        .expect("write BENCH_perf_hotpath.json");
+    eprintln!("[bench] wrote runs/reports/BENCH_perf_hotpath.json");
+
+    let baseline_path = std::env::var("DRANK_PERF_BASELINE")
+        .unwrap_or_else(|_| "rust/benches/baselines/BENCH_perf_hotpath.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => eprintln!("[bench] no baseline at {baseline_path}; skipping regression gate"),
+        Ok(raw) => {
+            let base = Json::parse(&raw).expect("parse perf baseline");
+            let mut failed = false;
+            for (name, t1, t4) in &ops {
+                let Some(b) = base.get("ops").and_then(|o| o.get(name)) else {
+                    eprintln!("[bench] {name}: not in baseline, skipping");
+                    continue;
+                };
+                for (key, got) in [("t1_ms", *t1), ("t4_ms", *t4)] {
+                    let Some(want) = b.get(key).and_then(|v| v.as_f64()) else { continue };
+                    if got > want * 3.0 {
+                        eprintln!(
+                            "[bench] REGRESSION {name}.{key}: {got:.2} ms > 3x baseline {want:.2} ms"
+                        );
+                        failed = true;
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(1);
+            }
+            eprintln!("[bench] regression gate passed (baseline {baseline_path})");
+        }
+    }
 }

@@ -16,6 +16,8 @@ use crate::model::{Weights, COMPRESSIBLE};
 use crate::runtime::engine::{tensor_of, Engine};
 use crate::runtime::lit_i32;
 use crate::tensor::MatF;
+use crate::util::parallel::{self, parallel_map};
+use crate::util::profile::{self, Stage};
 
 /// Where each compressible type reads its input statistics from.
 pub fn gram_slot(typ: &str) -> usize {
@@ -62,6 +64,7 @@ pub fn run(
     data: &DataBundle,
     opts: &CalibOpts,
 ) -> Result<CalibStats> {
+    let _t = profile::ScopedTimer::new(Stage::Calib);
     let cfg = weights.config;
     let stream = &data.domain(opts.domain).train;
     let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed);
@@ -163,6 +166,7 @@ pub fn run_reference(
     data: &DataBundle,
     opts: &CalibOpts,
 ) -> Result<CalibStats> {
+    let _t = profile::ScopedTimer::new(Stage::Calib);
     anyhow::ensure!(
         !opts.fisher,
         "fisher statistics need the AOT fisher artifact; use the PJRT calibration path"
@@ -170,10 +174,23 @@ pub fn run_reference(
     let cfg = weights.config;
     let stream = &data.domain(opts.domain).train;
     let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed);
+    // Batches are drawn up front (the batcher is stateful, so draw order
+    // fixes their contents), then forwarded in parallel. One wave of
+    // `threads()` per-batch partials at a time bounds peak memory; partials
+    // merge in batch order, so the statistics are bit-identical for any
+    // thread count (though grouped differently than a single running sum).
+    let batches: Vec<Vec<i32>> = (0..opts.batches).map(|_| batcher.next_batch()).collect();
     let mut sums = crate::model::fwd::CalibSums::new(&cfg);
-    for _ in 0..opts.batches {
-        let batch = batcher.next_batch();
-        crate::model::fwd::accumulate_calib(weights, &batch, cfg.batch, cfg.seq, &mut sums);
+    let wave = parallel::threads().max(1);
+    for chunk in batches.chunks(wave) {
+        let partials = parallel_map(chunk.to_vec(), |batch| {
+            let mut part = crate::model::fwd::CalibSums::new(&cfg);
+            crate::model::fwd::accumulate_calib(weights, &batch, cfg.batch, cfg.seq, &mut part);
+            part
+        });
+        for p in &partials {
+            sums.merge(p);
+        }
     }
     let tokens = sums.tokens;
     let mut grams = sums.grams;

@@ -18,6 +18,8 @@ use crate::linalg::svd::{svd, Svd};
 use crate::model::lowrank::{CompressedModel, GroupFactors, TypeRep};
 use crate::model::{ModelConfig, Weights, COMPRESSIBLE};
 use crate::tensor::MatF;
+use crate::util::parallel::parallel_map;
+use crate::util::profile::{self, Stage};
 
 /// Types eligible for cross-layer grouping (the paper groups Q,K,V,up,gate
 /// but never W_down / W_O — §4.1 implementation details).
@@ -41,7 +43,9 @@ pub struct GroupSvd {
 
 impl GroupSvd {
     /// Truncate to rank k and undo the scaling on the basis side.
+    /// (Profiled as the Truncate stage — includes the unwhitening solve.)
     pub fn factors(&self, k: usize, d2: usize) -> GroupFactors {
+        let _t = profile::ScopedTimer::new(Stage::Truncate);
         let (b_scaled, c) = self.svd.factors(k);
         let b = match &self.scaler {
             Scaler::None => b_scaled,
@@ -127,13 +131,17 @@ pub fn group_svd(
         Method::SvdLlm | Method::BasisSharing | Method::DRank => {
             // shared whitener from the group-mean input Gram
             let d1 = w_cat.rows;
-            let mut g = MatF::zeros(d1, d1);
-            for l in start..start + n {
-                g.add_assign(stats.gram(typ, l));
-            }
-            g.scale(1.0 / n as f64);
+            let g = profile::time(Stage::Gram, || {
+                let mut g = MatF::zeros(d1, d1);
+                for l in start..start + n {
+                    g.add_assign(stats.gram(typ, l));
+                }
+                g.scale(1.0 / n as f64);
+                g
+            });
             let wh = Whitener::from_gram(&g);
-            (wh.apply(&w_cat), Scaler::White(wh))
+            let sw = profile::time(Stage::Whiten, || wh.apply(&w_cat));
+            (sw, Scaler::White(wh))
         }
     };
     let decomp = svd(&scaled);
@@ -141,7 +149,9 @@ pub fn group_svd(
     GroupSvd { start, n, svd: decomp, reff, scaler }
 }
 
-/// All group SVDs of one type.
+/// All group SVDs of one type, decomposed in parallel (each group is an
+/// independent work unit; collection is index-ordered, so the result is
+/// bit-identical to the sequential loop).
 pub fn type_svds(
     weights: &Weights,
     stats: &CalibStats,
@@ -150,10 +160,42 @@ pub fn type_svds(
 ) -> Vec<GroupSvd> {
     let cfg = weights.config;
     let n = group_size(&cfg, typ, opts);
-    layer_groups(cfg.layers, n)
-        .into_iter()
-        .map(|(start, len)| group_svd(weights, stats, typ, start, len, opts))
-        .collect()
+    parallel_map(layer_groups(cfg.layers, n), |(start, len)| {
+        group_svd(weights, stats, typ, start, len, opts)
+    })
+}
+
+/// Group SVDs for every compressible type as ONE flat parallel work list.
+///
+/// Flattening across types load-balances better than per-type fan-out: the
+/// wide `w_gate`/`w_up` decompositions interleave with the cheap attention
+/// ones instead of serializing behind them. Results are reassembled in
+/// `COMPRESSIBLE`/group order, so the map is bit-identical to calling
+/// [`type_svds`] per type sequentially.
+pub fn all_type_svds(
+    weights: &Weights,
+    stats: &CalibStats,
+    opts: &CompressOpts,
+) -> BTreeMap<String, Vec<GroupSvd>> {
+    let cfg = weights.config;
+    let mut items: Vec<(&'static str, usize, usize)> = Vec::new();
+    for typ in COMPRESSIBLE {
+        let n = group_size(&cfg, typ, opts);
+        for (start, len) in layer_groups(cfg.layers, n) {
+            items.push((typ, start, len));
+        }
+    }
+    let decomposed = parallel_map(items.clone(), |(typ, start, len)| {
+        group_svd(weights, stats, typ, start, len, opts)
+    });
+    let mut out: BTreeMap<String, Vec<GroupSvd>> = BTreeMap::new();
+    for typ in COMPRESSIBLE {
+        out.insert(typ.to_string(), Vec::new());
+    }
+    for ((typ, _, _), g) in items.into_iter().zip(decomposed) {
+        out.get_mut(typ).unwrap().push(g);
+    }
+    out
 }
 
 /// Rank cap for a group: never exceed the group's break-even point.
@@ -199,7 +241,12 @@ pub fn plan_ranks(
         let (d1q, d2q) = cfg.matrix_dims("wq");
         let (d1k, d2k) = cfg.matrix_dims("wk");
         let (d1v, d2v) = cfg.matrix_dims("wv");
+        // each ω from that type's OWN group size: Q, K, V can be grouped
+        // differently (e.g. a per-type grouping override), and pricing K/V
+        // ranks with Q's n would misallocate the moved budget
         let nq = svds["wq"].first().map(|g| g.n).unwrap_or(1);
+        let nk = svds["wk"].first().map(|g| g.n).unwrap_or(1);
+        let nv = svds["wv"].first().map(|g| g.n).unwrap_or(1);
         let kmax_v: Vec<usize> =
             svds["wv"].iter().map(|g| group_kmax(d1v, d2v, g.n)).collect();
         let (q2, k2, v2) = beta_rebalance(
@@ -208,8 +255,8 @@ pub fn plan_ranks(
             &plan["wk"],
             &plan["wv"],
             d1q + nq * d2q,
-            d1k + nq * d2k,
-            d1v + nq * d2v,
+            d1k + nk * d2k,
+            d1v + nv * d2v,
             &kmax_v,
         );
         plan.insert("wq".into(), q2);
@@ -226,11 +273,9 @@ pub fn compress(
     stats: &CalibStats,
     opts: &CompressOpts,
 ) -> Result<(CompressedModel, RankPlan)> {
+    opts.validate()?;
     let cfg = weights.config;
-    let mut svds = BTreeMap::new();
-    for typ in COMPRESSIBLE {
-        svds.insert(typ.to_string(), type_svds(weights, stats, typ, opts));
-    }
+    let svds = all_type_svds(weights, stats, opts);
     let plan = plan_ranks(&cfg, &svds, opts);
     let mut model = CompressedModel::dense_passthrough(weights.clone());
     for typ in COMPRESSIBLE {
@@ -246,11 +291,9 @@ pub fn compress(
         if factored_params >= cfg.layers * d1 * d2 {
             continue;
         }
-        let reps: Vec<GroupFactors> = groups
-            .iter()
-            .zip(ks)
-            .map(|(g, &k)| g.factors(k, d2))
-            .collect();
+        let items: Vec<(usize, usize)> = ks.iter().copied().enumerate().collect();
+        let reps: Vec<GroupFactors> =
+            parallel_map(items, |(gi, k)| groups[gi].factors(k, d2));
         model.reps.insert(typ.to_string(), TypeRep::Factored(reps));
     }
     Ok((model, plan))

@@ -96,6 +96,57 @@ impl Default for CompressOpts {
     }
 }
 
+/// A rejected compression option: which flag and why. Typed (rather than a
+/// bare `anyhow!`) so sweep drivers can catch it per-point instead of
+/// aborting — and so `--beta 1.0` fails cleanly at parse time instead of
+/// tripping the `beta_rebalance` assertion mid-run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptsError {
+    pub flag: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for OptsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid --{}: {}", self.flag, self.message)
+    }
+}
+
+impl std::error::Error for OptsError {}
+
+impl CompressOpts {
+    /// Validate ranges before any compute. β must lie in [0, 1): β is the
+    /// *fraction* of Q/K rank budget moved to V, and `beta_rebalance`
+    /// asserts the same half-open interval.
+    pub fn validate(&self) -> Result<(), OptsError> {
+        if !self.ratio.is_finite() || !(0.0..1.0).contains(&self.ratio) {
+            return Err(OptsError {
+                flag: "ratio",
+                message: format!("{} not in [0, 1)", self.ratio),
+            });
+        }
+        if !self.beta.is_finite() || !(0.0..1.0).contains(&self.beta) {
+            return Err(OptsError {
+                flag: "beta",
+                message: format!("{} not in [0, 1) — β=1 would zero Q/K entirely", self.beta),
+            });
+        }
+        if self.group_layers < 1 {
+            return Err(OptsError {
+                flag: "group-layers",
+                message: "must be >= 1".to_string(),
+            });
+        }
+        if !self.asvd_alpha.is_finite() || self.asvd_alpha < 0.0 {
+            return Err(OptsError {
+                flag: "asvd-alpha",
+                message: format!("{} must be finite and >= 0", self.asvd_alpha),
+            });
+        }
+        Ok(())
+    }
+}
+
 /// Consecutive-layer grouping: L layers in chunks of n (tail may be short).
 pub fn layer_groups(layers: usize, n: usize) -> Vec<(usize, usize)> {
     assert!(n >= 1);
@@ -126,6 +177,34 @@ mod tests {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
         assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_opts() {
+        let ok = CompressOpts::default();
+        assert!(ok.validate().is_ok());
+
+        let mut beta_top = CompressOpts::default();
+        beta_top.beta = 1.0; // top of a β sweep — must error, not panic
+        let err = beta_top.validate().unwrap_err();
+        assert_eq!(err.flag, "beta");
+        assert!(err.to_string().contains("--beta"));
+
+        let mut beta_neg = CompressOpts::default();
+        beta_neg.beta = -0.1;
+        assert!(beta_neg.validate().is_err());
+
+        let mut bad_ratio = CompressOpts::default();
+        bad_ratio.ratio = 1.0;
+        assert_eq!(bad_ratio.validate().unwrap_err().flag, "ratio");
+
+        let mut bad_group = CompressOpts::default();
+        bad_group.group_layers = 0;
+        assert_eq!(bad_group.validate().unwrap_err().flag, "group-layers");
+
+        let mut bad_alpha = CompressOpts::default();
+        bad_alpha.asvd_alpha = f64::NAN;
+        assert_eq!(bad_alpha.validate().unwrap_err().flag, "asvd-alpha");
     }
 
     #[test]

@@ -15,17 +15,18 @@
 //! pure-Rust forward — so the whole pipeline runs (and is tested) with no
 //! `artifacts/` directory.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::Result;
 
-use super::methods::{compress, group_size, plan_ranks, type_svds, RankPlan};
+use super::methods::{all_type_svds, compress, group_size, group_svd, plan_ranks, RankPlan};
 use super::{layer_groups, CompressOpts};
 use crate::calib::{self, CalibOpts, CalibStats};
 use crate::data::DataBundle;
 use crate::model::lowrank::{CompressedModel, GroupFactors, TypeRep};
 use crate::model::{Weights, COMPRESSIBLE};
 use crate::runtime::Engine;
+use crate::util::parallel::parallel_map;
 
 /// Calibrate + compress in one call (PJRT calibration path).
 pub fn compress_model(
@@ -79,14 +80,34 @@ pub fn compensated_with(
     opts: &CompressOpts,
     mut recalib: impl FnMut(&Weights) -> Result<CalibStats>,
 ) -> Result<(CompressedModel, RankPlan)> {
+    opts.validate()?;
     let cfg = weights.config;
-    // 1. allocation from clean statistics
-    let mut svds = BTreeMap::new();
-    for typ in COMPRESSIBLE {
-        svds.insert(typ.to_string(), type_svds(weights, &stats0, typ, opts));
-    }
+    // 1. allocation from clean statistics (one flat parallel SVD sweep)
+    let svds = all_type_svds(weights, &stats0, opts);
     let plan = plan_ranks(&cfg, &svds, opts);
-    drop(svds); // whitening will be redone per block with fresh stats
+
+    // Skip rule aligned with `compress()`: a type whose *total* planned
+    // factorization would not shrink it stays dense outright (rather than
+    // only skipping the individual groups that hit break-even). Per-group
+    // break-even holes can still occur below; `compressible_param_count`
+    // charges those uncovered layers as dense.
+    let mut keep_dense: BTreeSet<&'static str> = BTreeSet::new();
+    for typ in COMPRESSIBLE {
+        let (d1, d2) = cfg.matrix_dims(typ);
+        let factored_params: usize = svds[typ]
+            .iter()
+            .zip(&plan[typ])
+            .map(|(g, &k)| k * (d1 + g.n * d2))
+            .sum();
+        if factored_params >= cfg.layers * d1 * d2 {
+            keep_dense.insert(typ);
+        }
+    }
+
+    // Block 0 sees stats identical to planning, so its group SVDs are
+    // reused verbatim (group_svd is deterministic — recomputing would give
+    // the same bits). Invalidated at the first recalibration.
+    let mut svds0 = Some(svds);
 
     // 2. block-by-block compression with recalibration. Block granularity is
     //    the grouping stride (max over types so group boundaries align).
@@ -105,8 +126,14 @@ pub fn compensated_with(
             // recalibrate with the compressed prefix reconstructed dense
             let current = model.to_dense();
             stats = recalib(&current)?;
+            svds0 = None; // deviated stats: planning SVDs no longer valid
         }
+        // collect this block's group work items: (typ, gi, gstart, glen, k, d2)
+        let mut items: Vec<(&'static str, usize, usize, usize, usize, usize)> = Vec::new();
         for typ in COMPRESSIBLE {
+            if keep_dense.contains(typ) {
+                continue;
+            }
             let (d1, d2) = cfg.matrix_dims(typ);
             let n_t = group_size(&cfg, typ, opts);
             let ks = &plan[typ];
@@ -119,12 +146,23 @@ pub fn compensated_with(
                 if k * (d1 + glen * d2) >= glen * d1 * d2 {
                     continue; // not worth factoring at this rank
                 }
-                let gs = super::methods::group_svd(weights, &stats, typ, gstart, glen, opts);
-                factored
-                    .entry(typ.to_string())
-                    .or_default()
-                    .push(gs.factors(k, d2));
+                items.push((typ, gi, gstart, glen, k, d2));
             }
+        }
+        // factor the block's groups in one parallel sweep; index-ordered
+        // collection keeps the group order (hence the output) identical to
+        // the sequential loop
+        let stats_ref = &stats;
+        let svds_ref = svds0.as_ref();
+        let done = parallel_map(items, |(typ, gi, gstart, glen, k, d2)| {
+            let gf = match svds_ref {
+                Some(s) => s[typ][gi].factors(k, d2),
+                None => group_svd(weights, stats_ref, typ, gstart, glen, opts).factors(k, d2),
+            };
+            (typ, gf)
+        });
+        for (typ, gf) in done {
+            factored.entry(typ.to_string()).or_default().push(gf);
         }
         // update the model after each block so the next recalibration sees it
         for (typ, gfs) in &factored {

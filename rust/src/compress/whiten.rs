@@ -10,6 +10,7 @@
 
 use crate::linalg::{cholesky_jitter, solve_lower_t};
 use crate::tensor::MatF;
+use crate::util::profile::{self, Stage};
 
 /// Whitener for one group: holds the Cholesky factor L (S = Lᵀ).
 pub struct Whitener {
@@ -20,7 +21,7 @@ pub struct Whitener {
 impl Whitener {
     /// Build from a (mean) input Gram matrix.
     pub fn from_gram(gram: &MatF) -> Self {
-        let (l, jitter) = cholesky_jitter(gram);
+        let (l, jitter) = profile::time(Stage::Whiten, || cholesky_jitter(gram));
         Self { l, jitter }
     }
 

@@ -10,6 +10,8 @@
 
 use super::eigen::jacobi_eigen;
 use crate::tensor::MatF;
+use crate::util::parallel::parallel_row_bands;
+use crate::util::profile::{self, Stage};
 
 /// Thin SVD A = U diag(s) Vᵀ with singular values sorted descending.
 pub struct Svd {
@@ -24,8 +26,8 @@ pub fn svd(a: &MatF) -> Svd {
     let r = m.min(n);
     if m <= n {
         // AAᵀ = U Λ Uᵀ ;  Vᵀ = Σ⁻¹ Uᵀ A
-        let g = gram_right(a); // A Aᵀ, m×m
-        let e = jacobi_eigen(&g);
+        let g = profile::time(Stage::Gram, || gram_right(a)); // A Aᵀ, m×m
+        let e = profile::time(Stage::Eigen, || jacobi_eigen(&g));
         let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
         let u = e.vectors; // m×m, columns sorted
         let uta = u.t_matmul(a); // m×n
@@ -45,8 +47,8 @@ pub fn svd(a: &MatF) -> Svd {
         Svd { u: u_thin, s, vt }
     } else {
         // AᵀA = V Λ Vᵀ ;  U = A V Σ⁻¹
-        let g = a.t_matmul(a); // n×n
-        let e = jacobi_eigen(&g);
+        let g = profile::time(Stage::Gram, || a.t_matmul(a)); // n×n
+        let e = profile::time(Stage::Eigen, || jacobi_eigen(&g));
         let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
         let v = e.vectors; // n×n
         let av = a.matmul(&v); // m×n
@@ -73,15 +75,28 @@ fn sv_floor(s: &[f64]) -> f64 {
 }
 
 /// A Aᵀ (m×m) without materializing the transpose.
+///
+/// Lower-triangle rows are computed in parallel bands; each dot product is
+/// an independent work unit, so the result is bit-identical for any thread
+/// count. The upper triangle is mirrored afterwards (cheap copies).
 fn gram_right(a: &MatF) -> MatF {
     let m = a.rows;
     let mut g = MatF::zeros(m, m);
+    parallel_row_bands(&mut g.data, m, m, |row0, band| {
+        let brows = band.len() / m;
+        for ii in 0..brows {
+            let i = row0 + ii;
+            let ri = a.row(i);
+            let grow = &mut band[ii * m..(ii + 1) * m];
+            for j in 0..=i {
+                let rj = a.row(j);
+                grow[j] = ri.iter().zip(rj).map(|(x, y)| x * y).sum();
+            }
+        }
+    });
     for i in 0..m {
-        let ri = a.row(i);
-        for j in 0..=i {
-            let rj = a.row(j);
-            let s: f64 = ri.iter().zip(rj).map(|(x, y)| x * y).sum();
-            *g.at_mut(i, j) = s;
+        for j in 0..i {
+            let s = g.at(i, j);
             *g.at_mut(j, i) = s;
         }
     }

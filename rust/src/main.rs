@@ -4,6 +4,7 @@
 //! drank train    --model m --steps 400 [--lr 3e-3] [--scale 1.0]
 //! drank compress --model m --method drank --ratio 0.2 [--group 2]
 //!                [--beta 0.3] [--compensate] [--calib wiki2s] [--eval]
+//!                [--threads N]
 //! drank eval     --model m [--domains wiki2s,ptbs,c4s] [--tasks]
 //! drank serve    --model m [--ratio 0.3] [--requests 200] [--clients 4]
 //!                [--workers 1] [--backend xla|ref] [--queue 256]
@@ -15,6 +16,10 @@
 //! forward — no `artifacts/` directory or PJRT needed (it even falls back
 //! to random-init weights when no checkpoint exists, so a bare checkout
 //! can exercise the full serving stack).
+//!
+//! `--threads N` sizes the compression engine's thread pool (any command;
+//! defaults to the machine's available parallelism, or `DRANK_THREADS`).
+//! Results are bit-identical for any thread count.
 
 use anyhow::{bail, Result};
 use drank::calib::CalibOpts;
@@ -33,6 +38,7 @@ use drank::util::Timer;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    drank::util::parallel::set_threads(args.threads_or_default());
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -110,7 +116,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn parse_compress_opts(args: &Args) -> Result<CompressOpts> {
-    Ok(CompressOpts {
+    let opts = CompressOpts {
         method: Method::parse(&args.str_or("method", "drank"))?,
         ratio: args.f64_or("ratio", 0.2),
         group_layers: args.usize_or("group", 2),
@@ -118,7 +124,11 @@ fn parse_compress_opts(args: &Args) -> Result<CompressOpts> {
         asvd_alpha: args.f64_or("alpha", 0.5),
         gqa_policy: !args.has("no-gqa-policy"),
         compensate: args.has("compensate"),
-    })
+    };
+    // reject out-of-range values (e.g. --beta 1.0) here with a typed error
+    // instead of panicking deep inside the allocator
+    opts.validate()?;
+    Ok(opts)
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
@@ -141,8 +151,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
         opts.group_layers,
         opts.beta
     );
+    drank::util::profile::reset();
     let timer = Timer::start();
     let (compressed, plan) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
+    let prof = drank::util::profile::snapshot(timer.millis());
     println!(
         "achieved ratio {:.3} in {:.1}s",
         compressed.achieved_ratio(),
@@ -151,6 +163,18 @@ fn cmd_compress(args: &Args) -> Result<()> {
     for (typ, ks) in &plan {
         println!("  {typ:<8} ranks {ks:?}");
     }
+    print!("{}", prof.render());
+    std::fs::create_dir_all("runs/reports")?;
+    std::fs::write(
+        format!("runs/reports/compress_profile_{model}.json"),
+        Json::obj(vec![
+            ("model", Json::str(model.clone())),
+            ("method", Json::str(opts.method.name())),
+            ("ratio", Json::num(opts.ratio)),
+            ("profile", prof.to_json()),
+        ])
+        .emit(),
+    )?;
     if args.has("eval") {
         let stream = &data.domain(Domain::Wiki2s).test;
         let ppl = eval::ppl_compressed(&engine, &compressed, stream, args.usize_or("eval-batches", 24))?;

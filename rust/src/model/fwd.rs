@@ -63,6 +63,23 @@ impl CalibSums {
             am[i] += x[i].abs() as f64;
         }
     }
+
+    /// Fold another accumulator into this one (elementwise sums). The
+    /// parallel calibration path computes one `CalibSums` per batch and
+    /// merges them in batch order, so results don't depend on thread count.
+    pub fn merge(&mut self, other: &CalibSums) {
+        for slot in 0..self.grams.len() {
+            for l in 0..self.grams[slot].len() {
+                self.grams[slot][l].add_assign(&other.grams[slot][l]);
+                for (a, b) in
+                    self.absmean[slot][l].iter_mut().zip(&other.absmean[slot][l])
+                {
+                    *a += b;
+                }
+            }
+        }
+        self.tokens += other.tokens;
+    }
 }
 
 /// Run the reference forward over one `[batch, seq]` token window while

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 
 use super::{ModelConfig, Weights, COMPRESSIBLE};
 use crate::tensor::{matmul::matmul_f32, Mat32};
+use crate::util::profile::{self, Stage};
 
 /// Shared-basis factors for one group of consecutive layers.
 #[derive(Clone, Debug)]
@@ -85,6 +86,12 @@ impl CompressedModel {
     }
 
     /// Parameter count across the compressible weight types.
+    ///
+    /// A factored type may not cover every layer: the compensated pipeline
+    /// skips a group whose planned rank hits its break-even point, leaving
+    /// those layers dense. They still cost d1·d2 parameters each, so they
+    /// are charged at the dense rate — otherwise `achieved_ratio()` would
+    /// over-report compression.
     pub fn compressible_param_count(&self) -> usize {
         let cfg = self.config();
         COMPRESSIBLE
@@ -95,7 +102,10 @@ impl CompressedModel {
                     cfg.layers * d1 * d2
                 }
                 TypeRep::Factored(groups) => {
-                    groups.iter().map(|g| g.param_count()).sum()
+                    let (d1, d2) = cfg.matrix_dims(t);
+                    let stored: usize = groups.iter().map(|g| g.param_count()).sum();
+                    let covered: usize = groups.iter().map(|g| g.n_layers()).sum();
+                    stored + (cfg.layers - covered) * d1 * d2
                 }
             })
             .sum()
@@ -117,7 +127,7 @@ impl CompressedModel {
                 let pidx = ModelConfig::param_index(typ);
                 for g in groups {
                     for (i, c) in g.cs.iter().enumerate() {
-                        let rec = matmul_f32(&g.b, c);
+                        let rec = profile::time(Stage::Reconstruct, || matmul_f32(&g.b, c));
                         w.tensors[pidx].set_layer_mat(g.start_layer + i, &rec);
                     }
                 }
@@ -178,6 +188,32 @@ mod tests {
             total,
             cfg.compressible_params() - dense_count + expect
         );
+    }
+
+    #[test]
+    fn skipped_group_layers_count_as_dense() {
+        // a factored type covering only layer 0 of 2: the uncovered layer
+        // must be charged at the dense d1*d2 rate, not vanish from the count
+        let mut m = tiny_model();
+        let cfg = m.config();
+        let (d1, d2) = cfg.matrix_dims("wq");
+        let k = 4usize;
+        let g = GroupFactors {
+            start_layer: 0,
+            b: Mat32::zeros(d1, k),
+            cs: vec![Mat32::zeros(k, d2)],
+        };
+        let stored = g.param_count();
+        m.reps.insert("wq".into(), TypeRep::Factored(vec![g]));
+        let want =
+            cfg.compressible_params() - cfg.layers * d1 * d2 // other types dense
+            + stored                                         // covered layer 0
+            + (cfg.layers - 1) * d1 * d2;                    // uncovered layer 1
+        assert_eq!(m.compressible_param_count(), want);
+        // ratio reflects only the actually-factored layer
+        let expect_ratio =
+            1.0 - want as f64 / cfg.compressible_params() as f64;
+        assert!((m.achieved_ratio() - expect_ratio).abs() < 1e-12);
     }
 
     #[test]

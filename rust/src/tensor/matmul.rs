@@ -3,26 +3,29 @@
 //! The pipeline's own GEMM (used by whitening / SVD reconstruction — the
 //! model hot path runs in XLA). i-k-j loop order with 64x64x64 blocking:
 //! the inner j-loop is a contiguous FMA over both B and C rows, which the
-//! compiler auto-vectorizes. See EXPERIMENTS.md §Perf for measurements.
+//! compiler auto-vectorizes. Rows of C are computed in parallel bands
+//! (`util::parallel::parallel_row_bands`); each output row's accumulation
+//! order is fixed by the k/j blocking alone, so results are bit-identical
+//! for any thread count. See EXPERIMENTS.md §Perf for measurements.
 
 use super::{Mat32, MatF};
+use crate::util::parallel::parallel_row_bands;
 
 const BLOCK: usize = 64;
 
-/// C = A * B, f64.
-pub fn matmul_f64(a: &MatF, b: &MatF) -> MatF {
-    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = MatF::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+fn f64_band(a: &MatF, b: &MatF, row0: usize, cband: &mut [f64]) {
+    let (k, n) = (a.cols, b.cols);
+    let brows = cband.len() / n;
+    for i0 in (0..brows).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(brows);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for j0 in (0..n).step_by(BLOCK) {
                 let j1 = (j0 + BLOCK).min(n);
                 for i in i0..i1 {
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    let gi = row0 + i;
+                    let arow = &a.data[gi * k..(gi + 1) * k];
+                    let crow = &mut cband[i * n..(i + 1) * n];
                     for kk in k0..k1 {
                         let av = arow[kk];
                         if av == 0.0 {
@@ -37,21 +40,28 @@ pub fn matmul_f64(a: &MatF, b: &MatF) -> MatF {
             }
         }
     }
+}
+
+/// C = A * B, f64.
+pub fn matmul_f64(a: &MatF, b: &MatF) -> MatF {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, n) = (a.rows, b.cols);
+    let mut c = MatF::zeros(m, n);
+    parallel_row_bands(&mut c.data, m, n, |row0, band| f64_band(a, b, row0, band));
     c
 }
 
-/// C = A * B, f32 (weight reconstruction W = B·C on the compression path).
-pub fn matmul_f32(a: &Mat32, b: &Mat32) -> Mat32 {
-    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat32::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+fn f32_band(a: &Mat32, b: &Mat32, row0: usize, cband: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    let brows = cband.len() / n;
+    for i0 in (0..brows).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(brows);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
+                let gi = row0 + i;
+                let arow = &a.data[gi * k..(gi + 1) * k];
+                let crow = &mut cband[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let av = arow[kk];
                     let brow = &b.data[kk * n..(kk + 1) * n];
@@ -62,6 +72,14 @@ pub fn matmul_f32(a: &Mat32, b: &Mat32) -> Mat32 {
             }
         }
     }
+}
+
+/// C = A * B, f32 (weight reconstruction W = B·C on the compression path).
+pub fn matmul_f32(a: &Mat32, b: &Mat32) -> Mat32 {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, n) = (a.rows, b.cols);
+    let mut c = Mat32::zeros(m, n);
+    parallel_row_bands(&mut c.data, m, n, |row0, band| f32_band(a, b, row0, band));
     c
 }
 
@@ -84,6 +102,7 @@ pub fn vecmat_f32(x: &[f32], a: &Mat32) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::parallel::set_threads;
     use crate::util::rng::Rng;
 
     fn naive(a: &MatF, b: &MatF) -> MatF {
@@ -128,6 +147,27 @@ mod tests {
         for (x, y) in got.data.iter().zip(&want.data) {
             assert!((*x as f64 - y).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn parallel_bands_are_bit_identical() {
+        let mut rng = Rng::new(7);
+        let a = random(&mut rng, 97, 65);
+        let b = random(&mut rng, 65, 51);
+        // t_matmul contracts over rows: give it a same-row-count partner
+        let c = random(&mut rng, 97, 51);
+        let (a32, b32) = (a.to_f32(), b.to_f32());
+        set_threads(1);
+        let base64 = matmul_f64(&a, &b);
+        let base32 = matmul_f32(&a32, &b32);
+        let base_t = a.t_matmul(&c);
+        for t in [2, 3, 4, 8] {
+            set_threads(t);
+            assert_eq!(matmul_f64(&a, &b).data, base64.data, "f64 @ {t} threads");
+            assert_eq!(matmul_f32(&a32, &b32).data, base32.data, "f32 @ {t} threads");
+            assert_eq!(a.t_matmul(&c).data, base_t.data, "t_matmul @ {t} threads");
+        }
+        set_threads(0);
     }
 
     #[test]

@@ -126,23 +126,31 @@ impl MatF {
     }
 
     /// C = A^T * B without materializing A^T.
+    ///
+    /// Output rows are computed in parallel bands; each (i, j) cell still
+    /// accumulates over k in ascending order, so the result is bit-identical
+    /// for any thread count.
     pub fn t_matmul(&self, b: &MatF) -> MatF {
         assert_eq!(self.rows, b.rows);
-        let mut out = MatF::zeros(self.cols, b.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = b.row(k);
-            for i in 0..self.cols {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for j in 0..b.cols {
-                    orow[j] += a * brow[j];
+        let (orows, ocols) = (self.cols, b.cols);
+        let mut out = MatF::zeros(orows, ocols);
+        crate::util::parallel::parallel_row_bands(&mut out.data, orows, ocols, |i0, band| {
+            let brows = band.len() / ocols;
+            for k in 0..self.rows {
+                let arow = self.row(k);
+                let brow = b.row(k);
+                for i in 0..brows {
+                    let a = arow[i0 + i];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut band[i * ocols..(i + 1) * ocols];
+                    for j in 0..ocols {
+                        orow[j] += a * brow[j];
+                    }
                 }
             }
-        }
+        });
         out
     }
 

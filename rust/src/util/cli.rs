@@ -76,6 +76,12 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// `--threads N` with the process default (DRANK_THREADS env /
+    /// available parallelism) as fallback; clamped to ≥ 1.
+    pub fn threads_or_default(&self) -> usize {
+        self.usize_or("threads", crate::util::parallel::default_threads()).max(1)
+    }
+
     /// Comma-separated list value.
     pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
         self.str_or(key, default)
@@ -120,6 +126,16 @@ mod tests {
         assert_eq!(a.duration_ms_or("missing-ms", 2).as_millis(), 2);
         assert_eq!(a.opt_usize("deadline-ms"), Some(250));
         assert_eq!(a.opt_usize("absent"), None);
+    }
+
+    #[test]
+    fn threads_flag() {
+        let a = parse("--threads 4");
+        assert_eq!(a.threads_or_default(), 4);
+        let b = parse("--threads 0");
+        assert_eq!(b.threads_or_default(), 1); // clamped up
+        let c = parse("");
+        assert!(c.threads_or_default() >= 1);
     }
 
     #[test]

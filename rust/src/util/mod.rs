@@ -1,7 +1,9 @@
-//! Shared utilities: PRNG, JSON, CLI argument parsing, timing.
+//! Shared utilities: PRNG, JSON, CLI argument parsing, timing, threading.
 
 pub mod cli;
 pub mod json;
+pub mod parallel;
+pub mod profile;
 pub mod rng;
 
 use std::time::Instant;

@@ -1,0 +1,190 @@
+//! Dependency-free data-parallel primitives (no external crates — this
+//! repo vendors offline, so no rayon).
+//!
+//! Two shapes cover every hot path in the compression engine:
+//!
+//!  - [`parallel_map`]: a scoped thread pool (`std::thread::scope` + one
+//!    atomic work index) over an owned work list, with **index-ordered
+//!    collection** — results come back in item order no matter which
+//!    thread ran which item.
+//!  - [`parallel_row_bands`]: split the rows of a row-major buffer into
+//!    one contiguous band per thread and hand each thread a disjoint
+//!    `&mut` band (GEMM / Gram row parallelism).
+//!
+//! **Bit-determinism contract:** every function here guarantees output
+//! bit-identical to a single-threaded run, for any thread count. That
+//! holds because the unit of work (one SVD, one output row, one calib
+//! batch) is computed by exactly the same instruction sequence regardless
+//! of the split, and no floating-point reduction ever crosses a work-unit
+//! boundary. The determinism test suite (`rust/tests/determinism.rs`)
+//! enforces this across all six compression methods and both pipelines.
+//!
+//! The pool size is a process-wide setting: `--threads N` on the CLI (or
+//! the `DRANK_THREADS` env var for benches/tests) feeds [`set_threads`];
+//! unset, it defaults to `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Configured pool size; 0 means "not set, use the default".
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The default pool size: `DRANK_THREADS` if set and valid, else the
+/// machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DRANK_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-wide pool size. 0 resets to the default
+/// (`DRANK_THREADS` / available parallelism).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The pool size parallel helpers will use right now.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Map `f` over `items` on up to [`threads`] worker threads.
+///
+/// Work is claimed through a single atomic index (dynamic load balancing —
+/// SVD costs vary a lot between groups), and results are written back into
+/// the slot of their item index, so the returned `Vec` is in item order
+/// and bit-identical to `items.into_iter().map(f).collect()`.
+///
+/// A panic in `f` propagates to the caller (via `std::thread::scope`).
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let nthreads = threads().min(n);
+    if nthreads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let done: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("work item claimed twice");
+                let out = f(item);
+                *done[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    done.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        .collect()
+}
+
+/// Run `f(first_row, band)` over contiguous whole-row bands of a row-major
+/// `rows`×`cols` buffer, one band per thread.
+///
+/// Each band is a disjoint `&mut [T]` (via `chunks_mut`), so this is safe
+/// shared-nothing parallelism. Because `f` must compute each row by the
+/// same instruction sequence wherever the band boundaries fall, the output
+/// is bit-identical for any thread count.
+pub fn parallel_row_bands<T, F>(data: &mut [T], rows: usize, cols: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "row-band shape mismatch");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let nthreads = threads().min(rows);
+    if nthreads <= 1 {
+        f(0, data);
+        return;
+    }
+    let band = rows.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (bi, chunk) in data.chunks_mut(band * cols).enumerate() {
+            let f = &f;
+            s.spawn(move || f(bi * band, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_item_order() {
+        let items: Vec<usize> = (0..137).collect();
+        let got = parallel_map(items.clone(), |x| x * 3 + 1);
+        let want: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<usize> = Vec::new();
+        assert!(parallel_map(empty, |x: usize| x).is_empty());
+        assert_eq!(parallel_map(vec![9usize], |x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn row_bands_cover_every_row_once() {
+        let (rows, cols) = (23, 7);
+        let mut data = vec![0u32; rows * cols];
+        parallel_row_bands(&mut data, rows, cols, |row0, band| {
+            let brows = band.len() / cols;
+            for i in 0..brows {
+                for j in 0..cols {
+                    band[i * cols + j] += ((row0 + i) * cols + j) as u32 + 1;
+                }
+            }
+        });
+        for (idx, v) in data.iter().enumerate() {
+            assert_eq!(*v, idx as u32 + 1, "row element touched != once");
+        }
+    }
+
+    #[test]
+    fn row_bands_degenerate_shapes() {
+        let mut none: Vec<f64> = Vec::new();
+        parallel_row_bands(&mut none, 0, 5, |_, _| panic!("no rows, no calls"));
+        parallel_row_bands(&mut none, 5, 0, |_, _| panic!("no cols, no calls"));
+        let mut one = vec![0.0f64; 4];
+        parallel_row_bands(&mut one, 1, 4, |row0, band| {
+            assert_eq!(row0, 0);
+            for x in band.iter_mut() {
+                *x = 2.0;
+            }
+        });
+        assert!(one.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn thread_setting_roundtrip() {
+        let before = threads();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0); // reset to default
+        assert!(threads() >= 1);
+        let _ = before;
+    }
+}

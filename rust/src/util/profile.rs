@@ -1,0 +1,196 @@
+//! Per-stage timing for the compression engine.
+//!
+//! Six stages cover the hot path end to end: calibration forward passes,
+//! Gram formation (calib Gram accumulation + the A·Aᵀ / AᵀA products inside
+//! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve,
+//! truncation (factor extraction, including the unwhitening solve), and
+//! dense reconstruction. Counters are process-global atomics so they can be
+//! bumped from worker threads without plumbing a handle through every call;
+//! `cpu_ms` therefore sums time across threads (it can exceed wall time —
+//! that's the point: wall/cpu shows how well a stage parallelizes).
+//!
+//! Usage: `profile::reset()` at the start of a run, do the work, then
+//! `profile::snapshot(wall_ms)` to get a [`CompressProfile`] for rendering
+//! or JSON emission (`drank compress` prints it and writes
+//! `runs/reports/compress_profile_<model>.json`; `perf_hotpath` folds it
+//! into `BENCH_perf_hotpath.json`).
+
+use crate::util::json::Json;
+use crate::util::parallel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Calib = 0,
+    Gram = 1,
+    Whiten = 2,
+    Eigen = 3,
+    Truncate = 4,
+    Reconstruct = 5,
+}
+
+pub const STAGE_NAMES: [&str; 6] =
+    ["calib", "gram", "whiten", "eigen", "truncate", "reconstruct"];
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static NANOS: [AtomicU64; 6] = [ZERO; 6];
+static CALLS: [AtomicU64; 6] = [ZERO; 6];
+
+/// Zero all stage counters (call before a profiled run).
+pub fn reset() {
+    for i in 0..6 {
+        NANOS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+fn record(stage: Stage, nanos: u64) {
+    NANOS[stage as usize].fetch_add(nanos, Ordering::Relaxed);
+    CALLS[stage as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Time a closure under `stage`.
+pub fn time<R>(stage: Stage, f: impl FnOnce() -> R) -> R {
+    let t0 = Instant::now();
+    let out = f();
+    record(stage, t0.elapsed().as_nanos() as u64);
+    out
+}
+
+/// Drop-guard timer for functions with early returns / `?`.
+pub struct ScopedTimer {
+    stage: Stage,
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn new(stage: Stage) -> Self {
+        ScopedTimer { stage, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        record(self.stage, self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    pub name: &'static str,
+    pub cpu_ms: f64,
+    pub calls: u64,
+}
+
+/// A snapshot of the per-stage counters for one compression run.
+#[derive(Clone, Debug)]
+pub struct CompressProfile {
+    pub threads: usize,
+    pub wall_ms: f64,
+    pub stages: Vec<StageTiming>,
+}
+
+/// Read the counters into a [`CompressProfile`]. `wall_ms` is the caller's
+/// end-to-end wall time for the profiled region.
+pub fn snapshot(wall_ms: f64) -> CompressProfile {
+    let stages = (0..6)
+        .map(|i| StageTiming {
+            name: STAGE_NAMES[i],
+            cpu_ms: NANOS[i].load(Ordering::Relaxed) as f64 / 1e6,
+            calls: CALLS[i].load(Ordering::Relaxed),
+        })
+        .collect();
+    CompressProfile { threads: parallel::threads(), wall_ms, stages }
+}
+
+impl CompressProfile {
+    /// Human-readable table for terminal output.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "stage profile ({} threads, {:.1} ms wall):",
+            self.threads, self.wall_ms
+        );
+        let _ = writeln!(s, "  {:<12} {:>10} {:>8}", "stage", "cpu ms", "calls");
+        for st in &self.stages {
+            let _ = writeln!(s, "  {:<12} {:>10.2} {:>8}", st.name, st.cpu_ms, st.calls);
+        }
+        let cpu_total: f64 = self.stages.iter().map(|s| s.cpu_ms).sum();
+        let _ = writeln!(s, "  {:<12} {:>10.2}", "total cpu", cpu_total);
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stages = self
+            .stages
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    ("name", Json::str(st.name)),
+                    ("cpu_ms", Json::num(st.cpu_ms)),
+                    ("calls", Json::num(st.calls as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            ("stages", Json::Arr(stages)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The counters are process-global and other modules' tests (compress,
+    // svd, to_dense) bump them concurrently, so: serialize the tests that
+    // call reset() against each other, and assert only deltas / lower
+    // bounds — never exact global values.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn counters_accumulate() {
+        let _g = LOCK.lock().unwrap();
+        let before = snapshot(0.0);
+        time(Stage::Gram, || std::hint::black_box(1 + 1));
+        {
+            let _t = ScopedTimer::new(Stage::Eigen);
+        }
+        let after = snapshot(1.0);
+        let calls = |p: &CompressProfile, name: &str| {
+            p.stages.iter().find(|s| s.name == name).unwrap().calls
+        };
+        assert!(calls(&after, "gram") >= calls(&before, "gram") + 1);
+        assert!(calls(&after, "eigen") >= calls(&before, "eigen") + 1);
+        assert_eq!(after.wall_ms, 1.0);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let _g = LOCK.lock().unwrap();
+        time(Stage::Calib, || ());
+        let j = snapshot(2.5).to_json();
+        assert!(j.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
+        assert_eq!(j.get("wall_ms").and_then(|v| v.as_f64()), Some(2.5));
+        let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(stages.len(), 6);
+        assert_eq!(stages[0].get("name").and_then(|v| v.as_str()), Some("calib"));
+    }
+
+    #[test]
+    fn reset_then_render_lists_every_stage() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        let out = snapshot(0.0).render();
+        for name in STAGE_NAMES {
+            assert!(out.contains(name), "missing stage {name} in render");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Determinism suite: parallel compression output must be bit-identical to
+//! a single-threaded run, across all six methods and both pipelines (plain
+//! and §4.1 compensated). This is the contract that lets `--threads N` be a
+//! pure speed knob — CI runs the whole test suite under a 1/4-thread
+//! `DRANK_THREADS` matrix on top of these explicit cross-count checks.
+//!
+//! The thread-pool size is process-global, so the tests that flip it hold a
+//! lock to serialize against each other (results are thread-count invariant
+//! by design, so concurrent *other* tests are unaffected either way).
+
+use std::sync::Mutex;
+
+use drank::calib::{CalibOpts, CalibStats};
+use drank::compress::{methods, pipeline, CompressOpts, Method};
+use drank::data::DataBundle;
+use drank::model::lowrank::{CompressedModel, TypeRep};
+use drank::model::{ModelConfig, Weights};
+use drank::util::parallel::set_threads;
+
+static THREAD_LOCK: Mutex<()> = Mutex::new(());
+
+fn all_methods() -> [Method; 6] {
+    [
+        Method::PlainSvd,
+        Method::Fwsvd,
+        Method::Asvd,
+        Method::SvdLlm,
+        Method::BasisSharing,
+        Method::DRank,
+    ]
+}
+
+/// Exact bit pattern of every factor in the model (f32::to_bits — equality
+/// means byte-identical factors, not "close").
+fn fingerprint(m: &CompressedModel) -> Vec<u32> {
+    let mut out = Vec::new();
+    for rep in m.reps.values() {
+        match rep {
+            TypeRep::Dense => out.push(u32::MAX),
+            TypeRep::Factored(groups) => {
+                for g in groups {
+                    out.push(g.start_layer as u32);
+                    out.push(g.b.rows as u32);
+                    out.push(g.b.cols as u32);
+                    out.extend(g.b.data.iter().map(|x| x.to_bits()));
+                    for c in &g.cs {
+                        out.extend(c.data.iter().map(|x| x.to_bits()));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn plain_pipeline_bit_identical_across_thread_counts() {
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, 42);
+    let stats = CalibStats::synthetic(&cfg, 7);
+    for method in all_methods() {
+        let opts = CompressOpts {
+            method,
+            ratio: 0.35,
+            group_layers: 2,
+            ..Default::default()
+        };
+        set_threads(1);
+        let (m1, p1) = methods::compress(&w, &stats, &opts).unwrap();
+        let f1 = fingerprint(&m1);
+        for t in [2usize, 4] {
+            set_threads(t);
+            let (mt, pt) = methods::compress(&w, &stats, &opts).unwrap();
+            assert_eq!(p1, pt, "{} rank plan diverged at {t} threads", method.name());
+            assert_eq!(
+                f1,
+                fingerprint(&mt),
+                "{} factors diverged at {t} threads",
+                method.name()
+            );
+        }
+    }
+    set_threads(0);
+}
+
+#[test]
+fn compensated_pipeline_bit_identical_across_thread_counts() {
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, 42);
+    let data = DataBundle::build(cfg.vocab, 3, 0.02);
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    // n=1 so the 2-layer tiny model exercises a real recalibration block;
+    // this covers the parallel reference calibration path too
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.4,
+        group_layers: 1,
+        compensate: true,
+        ..Default::default()
+    };
+    set_threads(1);
+    let (m1, p1) = pipeline::compress_model_reference(&w, &data, &copts, &opts).unwrap();
+    let f1 = fingerprint(&m1);
+    for t in [2usize, 4] {
+        set_threads(t);
+        let (mt, pt) = pipeline::compress_model_reference(&w, &data, &copts, &opts).unwrap();
+        assert_eq!(p1, pt, "compensated rank plan diverged at {t} threads");
+        assert_eq!(f1, fingerprint(&mt), "compensated factors diverged at {t} threads");
+    }
+    set_threads(0);
+}

@@ -117,6 +117,69 @@ fn uncompensated_pipeline_matches_direct_compress() {
 }
 
 #[test]
+fn compensated_ratio_accounts_for_skipped_groups() {
+    // Force a mid-stack break-even skip: tiny has d=64, so a wq group of one
+    // layer breaks even at k = 64*64/(64+64) = 32 — exactly the kmax clamp.
+    // At ratio 0.01 the allocator floors both wq groups near 31.7 and greedy
+    // repair pushes one to kmax=32, whose factoring (32*128 = 4096 = d1*d2)
+    // is skipped, leaving that layer dense. achieved_ratio() must charge it
+    // as dense instead of letting it vanish from the count.
+    let (cfg, w, data) = setup();
+    let copts = CalibOpts { batches: 2, ..Default::default() };
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.01,
+        group_layers: 1,
+        beta: 0.0, // keep the Q/K/V budgets untouched so the math above holds
+        compensate: true,
+        ..Default::default()
+    };
+    let (model, plan) = pipeline::compress_model_reference(&w, &data, &copts, &opts).unwrap();
+    assert!(plan.values().any(|ks| ks.contains(&32)), "no group clamped to kmax: {plan:?}");
+
+    // at least one factored type must have an uncovered (skipped) layer
+    let mut has_hole = false;
+    for typ in COMPRESSIBLE {
+        if let TypeRep::Factored(groups) = &model.reps[typ] {
+            let covered: usize = groups.iter().map(|g| g.n_layers()).sum();
+            assert!(covered <= cfg.layers, "{typ}: overlapping groups");
+            if covered < cfg.layers {
+                has_hole = true;
+            }
+        }
+    }
+    assert!(has_hole, "expected a mid-stack break-even skip at ratio 0.01");
+
+    // hand-computed parameter count: walk layer by layer through the
+    // factor lookup, charging dense layers at d1*d2 and each shared basis
+    // exactly once (identified by its data pointer)
+    let mut expect = 0usize;
+    for typ in COMPRESSIBLE {
+        let (d1, d2) = cfg.matrix_dims(typ);
+        let mut seen_bases: Vec<*const f32> = Vec::new();
+        for l in 0..cfg.layers {
+            match model.layer_factors(typ, l) {
+                None => expect += d1 * d2,
+                Some((b, c)) => {
+                    expect += c.rows * c.cols;
+                    let p = b.data.as_ptr();
+                    if !seen_bases.contains(&p) {
+                        seen_bases.push(p);
+                        expect += b.rows * b.cols;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(model.compressible_param_count(), expect);
+
+    // a near-zero target must report a near-zero achieved ratio — the old
+    // accounting dropped every skipped layer and reported ~20x the truth
+    let got = model.achieved_ratio();
+    assert!(got >= 0.0 && got < 0.05, "achieved_ratio {got} should be ~0.01");
+}
+
+#[test]
 fn compensated_seam_accepts_custom_recalibration() {
     // the recalibration provider is pluggable: count invocations and feed
     // synthetic stats — the §4.1 loop must call it once per block after
