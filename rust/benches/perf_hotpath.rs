@@ -11,11 +11,14 @@
 //!     run on the `tiny` config.
 //!
 //! Everything is folded into `runs/reports/BENCH_perf_hotpath.json` (the
-//! bench trajectory artifact CI uploads) and gated against the checked-in
-//! baseline `rust/benches/baselines/BENCH_perf_hotpath.json`: any op slower
-//! than 3x its baseline fails the bench. `DRANK_PERF_BASELINE` overrides
-//! the baseline path. `DRANK_FAST=1` lowers repetition counts only — sizes
-//! stay fixed so timings remain comparable against the baseline.
+//! bench trajectory artifact CI uploads; the per-stage profile is also
+//! written standalone as `runs/reports/compress_profile_tiny.json`) and
+//! gated against the checked-in baseline
+//! `rust/benches/baselines/BENCH_perf_hotpath.json`: any op — or the
+//! summed eigen_sweep+eigen_sort stage — slower than 3x its baseline fails
+//! the bench. `DRANK_PERF_BASELINE` overrides the baseline path.
+//! `DRANK_FAST=1` lowers repetition counts only — sizes stay fixed so
+//! timings remain comparable against the baseline.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -186,6 +189,43 @@ fn main() {
         ]);
         ops.push(("all_type_svds_m".into(), t1, t4));
     }
+    // blocked Jacobi eigensolve on a 384x384 Gram (the issue's headline
+    // size): byte-identical `Eigen` output at 1 vs 4 threads, speedup row
+    {
+        use drank::linalg::eigen::{jacobi_eigen, jacobi_eigen_blocked};
+        let n = 384;
+        let x = randf(&mut rng, n + 16, n);
+        let mut g = x.t_matmul(&x);
+        g.scale(1.0 / (n + 16) as f64);
+        set_threads(1);
+        let e1 = jacobi_eigen_blocked(&g);
+        set_threads(4);
+        let e4 = jacobi_eigen_blocked(&g);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&e1.values), bits(&e4.values), "eigenvalues not thread-invariant");
+        assert_eq!(
+            bits(&e1.vectors.data),
+            bits(&e4.vectors.data),
+            "eigenvectors not thread-invariant"
+        );
+        let (t1, t4) = scale_pair(|| { let _ = jacobi_eigen_blocked(&g); }, 3);
+        t.row(vec![
+            "eigen_blocked".into(),
+            format!("{n}x{n} @1->4T"),
+            format!("{t1:.1} -> {t4:.1}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("eigen_blocked_384".into(), t1, t4));
+        // serial reference on the same Gram, for the blocked-vs-serial row
+        set_threads(1);
+        let ms = median_time(|| { let _ = jacobi_eigen(&g); }, 3);
+        t.row(vec![
+            "eigen_serial".into(),
+            format!("{n}x{n}"),
+            format!("{ms:.1}"),
+            "cyclic reference".into(),
+        ]);
+    }
     set_threads(configured);
 
     // per-stage profile: artifact-free end-to-end compression on `tiny`
@@ -202,6 +242,21 @@ fn main() {
         let _ = model.to_dense(); // exercise the Reconstruct stage
         let prof = profile::snapshot(timer.millis());
         print!("{}", prof.render());
+        // the same per-model profile artifact `drank compress` writes, so
+        // the CI perf job can upload one without needing a checkpoint
+        std::fs::create_dir_all("runs/reports").expect("mkdir runs/reports");
+        std::fs::write(
+            "runs/reports/compress_profile_tiny.json",
+            Json::obj(vec![
+                ("model", Json::str("tiny")),
+                ("method", Json::str("drank")),
+                ("ratio", Json::num(o.ratio)),
+                ("profile", prof.to_json()),
+            ])
+            .emit(),
+        )
+        .expect("write compress_profile_tiny.json");
+        eprintln!("[bench] wrote runs/reports/compress_profile_tiny.json");
         prof
     };
 
@@ -291,6 +346,21 @@ fn main() {
                         failed = true;
                     }
                 }
+            }
+            // eigen-stage gate: the summed eigen_sweep+eigen_sort cpu-ms of
+            // the tiny-config profile, same 3x rule as the op rows
+            if let Some(want) =
+                base.get("profile").and_then(|p| p.get("eigen_cpu_ms")).and_then(|v| v.as_f64())
+            {
+                let got = prof.eigen_ms();
+                if got > want * 3.0 {
+                    eprintln!(
+                        "[bench] REGRESSION eigen stage: {got:.2} cpu-ms > 3x baseline {want:.2} cpu-ms"
+                    );
+                    failed = true;
+                }
+            } else {
+                eprintln!("[bench] baseline has no profile.eigen_cpu_ms; skipping eigen gate");
             }
             if failed {
                 std::process::exit(1);

@@ -1,6 +1,11 @@
 //! Rank allocation: the paper's Lagrange-multiplier scheme (§3.2, App B.3)
 //! and the β-rebalance across attention types (§3.3).
 //!
+//! R_eff comes from the σ² spectrum of each group's SVD (the blocked
+//! Jacobi eigensolve in `linalg`), so allocation latency is bounded by
+//! eigensolver throughput — and allocations are bit-identical for any
+//! `--threads` value, making rank plans reproducible across machines.
+//!
 //! Per weight type with G groups of effective rank R_eff(g), parameter cost
 //! per rank ω = d1 + n·d2, and budget T = (1−θ)·(type params):
 //!     min Σ R_eff(g)/k_g   s.t.  Σ k_g·ω = T

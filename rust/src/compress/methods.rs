@@ -144,6 +144,9 @@ pub fn group_svd(
             (sw, Scaler::White(wh))
         }
     };
+    // the blocked Jacobi eigensolve inside `svd` is itself pool-parallel
+    // (and still bit-deterministic), so a single large group scales even
+    // when the per-group fan-out in `type_svds` has spare threads
     let decomp = svd(&scaled);
     let reff = effective_rank(&decomp.s);
     GroupSvd { start, n, svd: decomp, reff, scaler }

@@ -6,7 +6,10 @@
 //! so the optimal rank-k Ŵ is S⁻¹·(S·W)_k with S = Lᵀ. The paper writes
 //! this as "SSᵀ = cholesky(XᵀX)" (§3.1); n=1 grouping reduces exactly to
 //! SVD-LLM. Grouped variants share one S computed from the summed Gram of
-//! the group's layers (DESIGN.md "Method conventions").
+//! the group's layers (DESIGN.md "Method conventions"). The whitened
+//! matrix S·W then goes through `linalg::svd` — whose Gram eigensolve is
+//! the blocked-parallel Jacobi — so whitening cost is profiled under the
+//! `whiten` stage and the decomposition under `eigen_sweep`/`eigen_sort`.
 
 use crate::linalg::{cholesky_jitter, solve_lower_t};
 use crate::tensor::MatF;

@@ -191,6 +191,11 @@ pub struct ServerOpts {
     /// on shape-flexible backends; fixed-shape compiled graphs always run
     /// the full window, where bucketing would just fragment batches
     pub bucket_by_length: bool,
+    /// size the process-wide `util/parallel.rs` pool the backends compute
+    /// on — the same knob as `--threads` on the compression side, so one
+    /// flag sizes both halves of the system. 0 leaves the current setting
+    /// untouched (CLI default: whatever `main` already configured).
+    pub threads: usize,
 }
 
 impl Default for ServerOpts {
@@ -201,6 +206,7 @@ impl Default for ServerOpts {
             workers: 1,
             deadline: None,
             bucket_by_length: true,
+            threads: 0,
         }
     }
 }
@@ -405,6 +411,9 @@ impl Server {
         B: ScoreBackend + 'static,
         F: Fn() -> Result<B> + Send + Sync + 'static,
     {
+        if opts.threads > 0 {
+            crate::util::parallel::set_threads(opts.threads);
+        }
         let n = opts.workers.max(1);
         let queue = Arc::new(SharedQueue::new(opts.queue));
         let metrics = Arc::new(Mutex::new(Metrics {

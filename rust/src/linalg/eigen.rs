@@ -1,11 +1,27 @@
-//! Cyclic Jacobi eigensolver for symmetric matrices.
+//! Jacobi eigensolvers for symmetric matrices: serial cyclic sweeps and a
+//! blocked round-robin variant that fans each round's independent rotations
+//! out on the `util/parallel.rs` pool.
 //!
 //! Sizes here are <= ~768 (the smaller Gram side of a grouped weight
 //! matrix), where Jacobi's O(n³) per sweep with quadratic convergence is
 //! fast, simple, and — importantly for effective-rank computation — highly
 //! accurate for small eigenvalues compared to tridiagonalization at f64.
+//!
+//! **Determinism contract** (EXPERIMENTS.md §Perf): [`jacobi_eigen_blocked`]
+//! returns bit-identical `Eigen` output for any thread count. Each sweep is
+//! a fixed tournament schedule of rounds; within a round every (p,q) pivot
+//! pair is disjoint from every other, rotation angles are read from the
+//! round-start matrix (which sequential application would produce too — no
+//! other rotation in the round touches the (p,p), (p,q), (q,q) entries),
+//! and the three update phases (columns, rows, eigenvector columns) each
+//! compute every element by the same instruction sequence regardless of how
+//! the work is split. `rust/tests/determinism.rs` enforces the contract
+//! across 1/2/4 threads; `rust/tests/eigen_properties.rs` pins the numerics
+//! of both solvers against synthesized spectra.
 
 use crate::tensor::MatF;
+use crate::util::parallel::{parallel_pair_rows, parallel_row_bands};
+use crate::util::profile::{self, Stage};
 
 /// Result of a symmetric eigendecomposition A = V diag(w) Vᵀ,
 /// eigenvalues sorted descending, V columns the matching eigenvectors.
@@ -14,60 +30,229 @@ pub struct Eigen {
     pub vectors: MatF, // column i <-> values[i]
 }
 
-/// Cyclic Jacobi with threshold sweeping. `a` must be symmetric.
+/// Convergence ceiling shared by both solvers. Cyclic and round-robin
+/// orderings both converge quadratically once sweeps get close; 64 is far
+/// above what any <=768 Gram matrix needs.
+const MAX_SWEEPS: usize = 64;
+
+/// Debug-only symmetry check: both solvers silently assume A = Aᵀ (they
+/// only ever read the entries a rotation owns), so catch asymmetric inputs
+/// at the door instead of returning a quietly wrong spectrum.
+fn debug_assert_symmetric(a: &MatF) {
+    if cfg!(debug_assertions) {
+        let scale = a.data.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let tol = scale * 1e-8 + 1e-12;
+        for i in 0..a.rows {
+            for j in i + 1..a.cols {
+                debug_assert!(
+                    (a.at(i, j) - a.at(j, i)).abs() <= tol,
+                    "eigensolver input not symmetric at ({i},{j}): {} vs {}",
+                    a.at(i, j),
+                    a.at(j, i)
+                );
+            }
+        }
+    }
+}
+
+/// n <= 1 never needs a sweep; return a well-formed `Eigen` directly.
+/// (The old construction built `values` as `vec![..; n.min(1)]` against an
+/// identity-shaped `vectors`, which left the n=0 result malformed.)
+fn trivial_eigen(a: &MatF) -> Eigen {
+    match a.rows {
+        0 => Eigen { values: Vec::new(), vectors: MatF::zeros(0, 0) },
+        1 => Eigen { values: vec![a.at(0, 0)], vectors: MatF::identity(1) },
+        n => unreachable!("trivial_eigen called with n={n}"),
+    }
+}
+
+/// Sum of squared strictly-upper-triangle entries (the Jacobi objective).
+fn off_diag_sq(m: &MatF) -> f64 {
+    let n = m.rows;
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in i + 1..n {
+            s += m.at(i, j) * m.at(i, j);
+        }
+    }
+    s
+}
+
+/// Stable rotation coefficients (tau formulation) annihilating a_pq.
+#[inline]
+fn rotation_coeffs(app: f64, aqq: f64, apq: f64) -> (f64, f64) {
+    let tau = (aqq - app) / (2.0 * apq);
+    let t = if tau >= 0.0 {
+        1.0 / (tau + (1.0 + tau * tau).sqrt())
+    } else {
+        1.0 / (tau - (1.0 + tau * tau).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    let s = t * c;
+    (c, s)
+}
+
+/// Round-robin tournament schedule over `n` indices (circle method):
+/// `n'-1` rounds (n' = n rounded up to even) of disjoint (p,q) pairs, every
+/// unordered pair appearing exactly once per full schedule. Index `n'-1`
+/// stays fixed while the rest rotate; when `n` is odd the padded index is a
+/// bye and its pair is dropped. The schedule — and the order of pairs
+/// within each round — is a pure function of `n`, which is what makes the
+/// blocked sweep's canonical rotation order deterministic.
+pub fn tournament_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    if n < 2 {
+        return Vec::new();
+    }
+    let m = n + (n % 2); // pad with a bye when odd
+    let mut rounds = Vec::with_capacity(m - 1);
+    for r in 0..m - 1 {
+        let mut pairs = Vec::with_capacity(m / 2);
+        for k in 0..m / 2 {
+            let (a, b) = if k == 0 {
+                (m - 1, r % (m - 1))
+            } else {
+                ((r + k) % (m - 1), (r + m - 1 - k) % (m - 1))
+            };
+            if a >= n || b >= n {
+                continue; // the bye sits out this round
+            }
+            pairs.push((a.min(b), a.max(b)));
+        }
+        rounds.push(pairs);
+    }
+    rounds
+}
+
+/// Serial cyclic Jacobi with threshold sweeping. `a` must be symmetric.
+///
+/// Kept as the reference path: the property suite pins
+/// [`jacobi_eigen_blocked`] against it, and single-matrix callers that are
+/// already inside a parallel region can use it to avoid nested fan-out.
 pub fn jacobi_eigen(a: &MatF) -> Eigen {
-    assert_eq!(a.rows, a.cols);
+    assert_eq!(a.rows, a.cols, "eigensolver needs a square matrix");
+    debug_assert_symmetric(a);
     let n = a.rows;
+    if n <= 1 {
+        return trivial_eigen(a);
+    }
     let mut m = a.clone();
     let mut v = MatF::identity(n);
-    if n <= 1 {
-        return sort_eigen(vec![if n == 1 { m.at(0, 0) } else { 0.0 }; n.min(1)], v);
-    }
 
-    let max_sweeps = 64;
-    for _sweep in 0..max_sweeps {
-        let off: f64 = {
-            let mut s = 0.0;
-            for i in 0..n {
-                for j in i + 1..n {
-                    s += m.at(i, j) * m.at(i, j);
+    profile::time(Stage::EigenSweep, || {
+        for _sweep in 0..MAX_SWEEPS {
+            let off = off_diag_sq(&m);
+            let scale: f64 = m.data.iter().map(|x| x * x).sum();
+            if off <= 1e-26 * scale.max(1e-300) {
+                break;
+            }
+            // threshold sweeping: rotations on negligible off-diagonal
+            // entries cost O(n) each but reduce the objective by ~0;
+            // skipping them cuts late sweeps to near no-ops (measured 1.9x
+            // on 192x384 inputs — EXPERIMENTS.md §Perf)
+            let thresh = (off / (n * n) as f64).sqrt() * 0.5;
+            for p in 0..n - 1 {
+                for q in p + 1..n {
+                    let apq = m.at(p, q);
+                    if apq.abs() <= thresh || apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let (c, s) = rotation_coeffs(m.at(p, p), m.at(q, q), apq);
+                    rotate(&mut m, p, q, c, s);
+                    rotate_cols(&mut v, p, q, c, s);
                 }
             }
-            s
-        };
-        let scale: f64 = m.data.iter().map(|x| x * x).sum();
-        if off <= 1e-26 * scale.max(1e-300) {
-            break;
         }
-        // threshold sweeping: rotations on negligible off-diagonal entries
-        // cost O(n) each but reduce the objective by ~0; skipping them cuts
-        // late sweeps to near no-ops (measured 1.9x on 192x384 inputs —
-        // EXPERIMENTS.md §Perf)
-        let thresh = (off / (n * n) as f64).sqrt() * 0.5;
-        for p in 0..n - 1 {
-            for q in p + 1..n {
-                let apq = m.at(p, q);
-                if apq.abs() <= thresh || apq.abs() < 1e-300 {
+    });
+    let values: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    profile::time(Stage::EigenSort, || sort_eigen(values, v))
+}
+
+/// Blocked round-robin Jacobi: the same threshold-swept rotations as
+/// [`jacobi_eigen`], scheduled as tournament rounds of disjoint pivot
+/// pairs so each round's updates fan out on the thread pool.
+///
+/// Per round: (1) rotation angles are computed sequentially from the
+/// round-start matrix (O(n) — every pair owns its own 2x2 block, so this
+/// matches what in-order application would read); (2) the column phase
+/// M <- M·J runs row-band-parallel, each row applying the round's
+/// rotations in canonical order; (3) the row phase M <- Jᵀ·M runs
+/// pair-parallel — each rotation owns exactly rows p and q, which no other
+/// rotation in the round touches; (4) the eigenvector update V <- V·J is
+/// another row-band column phase. Every element is produced by a fixed
+/// instruction sequence independent of the work split, so the output is
+/// bit-identical for any thread count.
+pub fn jacobi_eigen_blocked(a: &MatF) -> Eigen {
+    assert_eq!(a.rows, a.cols, "eigensolver needs a square matrix");
+    debug_assert_symmetric(a);
+    let n = a.rows;
+    if n <= 1 {
+        return trivial_eigen(a);
+    }
+    let mut m = a.clone();
+    let mut v = MatF::identity(n);
+    let rounds = tournament_rounds(n);
+
+    profile::time(Stage::EigenSweep, || {
+        for _sweep in 0..MAX_SWEEPS {
+            let off = off_diag_sq(&m);
+            let scale: f64 = m.data.iter().map(|x| x * x).sum();
+            if off <= 1e-26 * scale.max(1e-300) {
+                break;
+            }
+            let thresh = (off / (n * n) as f64).sqrt() * 0.5;
+            for round in &rounds {
+                // (1) angles from the round-start matrix, canonical order
+                let rots: Vec<(usize, usize, f64, f64)> = round
+                    .iter()
+                    .filter_map(|&(p, q)| {
+                        let apq = m.at(p, q);
+                        if apq.abs() <= thresh || apq.abs() < 1e-300 {
+                            return None;
+                        }
+                        let (c, s) = rotation_coeffs(m.at(p, p), m.at(q, q), apq);
+                        Some((p, q, c, s))
+                    })
+                    .collect();
+                if rots.is_empty() {
                     continue;
                 }
-                let app = m.at(p, p);
-                let aqq = m.at(q, q);
-                // rotation angle via the stable tau formulation
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
-                } else {
-                    1.0 / (tau - (1.0 + tau * tau).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
-                rotate(&mut m, p, q, c, s);
-                rotate_cols(&mut v, p, q, c, s);
+                // (2) column phase: M <- M·J, one band of whole rows per
+                // thread, rotations applied in list order within each row
+                parallel_row_bands(&mut m.data, n, n, |_, band| {
+                    for row in band.chunks_mut(n) {
+                        for &(p, q, c, s) in &rots {
+                            let (xp, xq) = (row[p], row[q]);
+                            row[p] = c * xp - s * xq;
+                            row[q] = s * xp + c * xq;
+                        }
+                    }
+                });
+                // (3) row phase: M <- Jᵀ·M; rotation i owns rows pairs[i]
+                let pairs: Vec<(usize, usize)> =
+                    rots.iter().map(|&(p, q, _, _)| (p, q)).collect();
+                parallel_pair_rows(&mut m.data, n, n, &pairs, |i, rp, rq| {
+                    let (_, _, c, s) = rots[i];
+                    for j in 0..n {
+                        let (xp, xq) = (rp[j], rq[j]);
+                        rp[j] = c * xp - s * xq;
+                        rq[j] = s * xp + c * xq;
+                    }
+                });
+                // (4) accumulate eigenvectors: V <- V·J (columns only)
+                parallel_row_bands(&mut v.data, n, n, |_, band| {
+                    for row in band.chunks_mut(n) {
+                        for &(p, q, c, s) in &rots {
+                            let (xp, xq) = (row[p], row[q]);
+                            row[p] = c * xp - s * xq;
+                            row[q] = s * xp + c * xq;
+                        }
+                    }
+                });
             }
         }
-    }
+    });
     let values: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
-    sort_eigen(values, v)
+    profile::time(Stage::EigenSort, || sort_eigen(values, v))
 }
 
 /// Apply the two-sided rotation J(p,q,θ)ᵀ M J(p,q,θ) in place.
@@ -133,13 +318,15 @@ mod tests {
         let mut rng = Rng::new(0);
         for n in [1, 2, 5, 33, 80] {
             let a = random_sym(&mut rng, n);
-            let e = jacobi_eigen(&a);
-            // A V = V diag(w)
-            let av = a.matmul(&e.vectors);
-            for i in 0..n {
-                for j in 0..n {
-                    let want = e.vectors.at(i, j) * e.values[j];
-                    assert!((av.at(i, j) - want).abs() < 1e-8, "n={n}");
+            for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+                let e = solve(&a);
+                // A V = V diag(w)
+                let av = a.matmul(&e.vectors);
+                for i in 0..n {
+                    for j in 0..n {
+                        let want = e.vectors.at(i, j) * e.values[j];
+                        assert!((av.at(i, j) - want).abs() < 1e-8, "n={n}");
+                    }
                 }
             }
         }
@@ -149,9 +336,11 @@ mod tests {
     fn eigenvalues_sorted_descending() {
         let mut rng = Rng::new(1);
         let a = random_sym(&mut rng, 20);
-        let e = jacobi_eigen(&a);
-        for w in e.values.windows(2) {
-            assert!(w[0] >= w[1] - 1e-12);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&a);
+            for w in e.values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
         }
     }
 
@@ -159,12 +348,14 @@ mod tests {
     fn vectors_orthonormal() {
         let mut rng = Rng::new(2);
         let a = random_sym(&mut rng, 25);
-        let e = jacobi_eigen(&a);
-        let vtv = e.vectors.t_matmul(&e.vectors);
-        for i in 0..25 {
-            for j in 0..25 {
-                let want = if i == j { 1.0 } else { 0.0 };
-                assert!((vtv.at(i, j) - want).abs() < 1e-9);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&a);
+            let vtv = e.vectors.t_matmul(&e.vectors);
+            for i in 0..25 {
+                for j in 0..25 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((vtv.at(i, j) - want).abs() < 1e-9);
+                }
             }
         }
     }
@@ -175,8 +366,10 @@ mod tests {
         for (i, v) in [3.0, -1.0, 7.0, 0.5].iter().enumerate() {
             *a.at_mut(i, i) = *v;
         }
-        let e = jacobi_eigen(&a);
-        assert_eq!(e.values, vec![7.0, 3.0, 0.5, -1.0]);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&a);
+            assert_eq!(e.values, vec![7.0, 3.0, 0.5, -1.0]);
+        }
     }
 
     #[test]
@@ -184,8 +377,67 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = random_sym(&mut rng, 40);
         let tr: f64 = (0..40).map(|i| a.at(i, i)).sum();
-        let e = jacobi_eigen(&a);
-        let sum: f64 = e.values.iter().sum();
-        assert!((tr - sum).abs() < 1e-8);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&a);
+            let sum: f64 = e.values.iter().sum();
+            assert!((tr - sum).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes_are_well_formed() {
+        // n=0: empty spectrum AND 0x0 vectors (the old path left these
+        // shapes inconsistent); n=1: the sole entry, identity vector
+        let empty = MatF::zeros(0, 0);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&empty);
+            assert!(e.values.is_empty());
+            assert_eq!((e.vectors.rows, e.vectors.cols), (0, 0));
+            assert!(e.vectors.data.is_empty());
+        }
+        let one = MatF::from_vec(1, 1, vec![-2.5]);
+        for solve in [jacobi_eigen as fn(&MatF) -> Eigen, jacobi_eigen_blocked] {
+            let e = solve(&one);
+            assert_eq!(e.values, vec![-2.5]);
+            assert_eq!((e.vectors.rows, e.vectors.cols), (1, 1));
+            assert_eq!(e.vectors.data, vec![1.0]);
+        }
+    }
+
+    #[test]
+    fn tournament_schedule_covers_every_pair_once() {
+        for n in [2usize, 3, 5, 8, 17, 32] {
+            let rounds = tournament_rounds(n);
+            let mut seen = std::collections::BTreeSet::new();
+            for round in &rounds {
+                // pairs within a round are disjoint (the parallel-safety
+                // invariant of the blocked sweep)
+                let mut used = vec![false; n];
+                for &(p, q) in round {
+                    assert!(p < q && q < n, "bad pair ({p},{q}) for n={n}");
+                    assert!(!used[p] && !used[q], "overlap in round for n={n}");
+                    used[p] = true;
+                    used[q] = true;
+                    assert!(seen.insert((p, q)), "pair ({p},{q}) repeated");
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "missing pairs for n={n}");
+        }
+        assert!(tournament_rounds(0).is_empty());
+        assert!(tournament_rounds(1).is_empty());
+    }
+
+    #[test]
+    fn serial_and_blocked_agree_on_spectrum() {
+        let mut rng = Rng::new(4);
+        for n in [7usize, 24, 61] {
+            let a = random_sym(&mut rng, n);
+            let es = jacobi_eigen(&a);
+            let eb = jacobi_eigen_blocked(&a);
+            let scale = es.values.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+            for (ws, wb) in es.values.iter().zip(&eb.values) {
+                assert!((ws - wb).abs() <= 1e-9 * scale, "n={n}: {ws} vs {wb}");
+            }
+        }
     }
 }

@@ -3,7 +3,9 @@
 //! Everything the compression pipeline needs, built from scratch:
 //! Cholesky with adaptive jitter (whitening S from possibly rank-deficient
 //! calibration Grams), triangular solves (applying S^-1 without forming an
-//! inverse), a cyclic Jacobi symmetric eigensolver, SVD via the smaller-side
+//! inverse), a cyclic Jacobi symmetric eigensolver (serial reference plus a
+//! blocked round-robin variant that parallelizes each sweep over disjoint
+//! pivot pairs, bit-identical for any thread count), SVD via the smaller-side
 //! Gram eigendecomposition, and the paper's spectral-entropy effective rank.
 //!
 //! Precision note: the paper computes S in FP64 (§4.1); this module is f64

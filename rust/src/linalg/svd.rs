@@ -2,13 +2,16 @@
 //!
 //! For A (m×n), eigendecompose AAᵀ (if m<=n) or AᵀA, then recover the
 //! other factor by projection. The smaller side here is at most ~768
-//! (d or dff), so the Jacobi solve dominates and stays well under a
-//! second per matrix. Accuracy of small singular triplets is limited by
-//! the squaring (σ ~ sqrt(eps) floor); the compression pipeline only
-//! consumes the *leading* k triplets and the σ² distribution (effective
-//! rank), both of which the Gram route computes accurately at f64.
+//! (d or dff), so the Jacobi solve dominates; it runs through the
+//! blocked round-robin sweep (`jacobi_eigen_blocked`), which fans each
+//! tournament round's disjoint rotations out on the `--threads` pool
+//! while staying bit-identical to the serial solver. Accuracy of small
+//! singular triplets is limited by the squaring (σ ~ sqrt(eps) floor);
+//! the compression pipeline only consumes the *leading* k triplets and
+//! the σ² distribution (effective rank), both of which the Gram route
+//! computes accurately at f64.
 
-use super::eigen::jacobi_eigen;
+use super::eigen::jacobi_eigen_blocked;
 use crate::tensor::MatF;
 use crate::util::parallel::parallel_row_bands;
 use crate::util::profile::{self, Stage};
@@ -27,7 +30,7 @@ pub fn svd(a: &MatF) -> Svd {
     if m <= n {
         // AAᵀ = U Λ Uᵀ ;  Vᵀ = Σ⁻¹ Uᵀ A
         let g = profile::time(Stage::Gram, || gram_right(a)); // A Aᵀ, m×m
-        let e = profile::time(Stage::Eigen, || jacobi_eigen(&g));
+        let e = jacobi_eigen_blocked(&g); // self-times eigen_sweep/eigen_sort
         let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
         let u = e.vectors; // m×m, columns sorted
         let uta = u.t_matmul(a); // m×n
@@ -48,7 +51,7 @@ pub fn svd(a: &MatF) -> Svd {
     } else {
         // AᵀA = V Λ Vᵀ ;  U = A V Σ⁻¹
         let g = profile::time(Stage::Gram, || a.t_matmul(a)); // n×n
-        let e = profile::time(Stage::Eigen, || jacobi_eigen(&g));
+        let e = jacobi_eigen_blocked(&g); // self-times eigen_sweep/eigen_sort
         let s: Vec<f64> = e.values.iter().take(r).map(|&w| w.max(0.0).sqrt()).collect();
         let v = e.vectors; // n×n
         let av = a.matmul(&v); // m×n

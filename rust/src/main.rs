@@ -17,9 +17,11 @@
 //! to random-init weights when no checkpoint exists, so a bare checkout
 //! can exercise the full serving stack).
 //!
-//! `--threads N` sizes the compression engine's thread pool (any command;
+//! `--threads N` sizes the one process-wide thread pool (any command;
 //! defaults to the machine's available parallelism, or `DRANK_THREADS`).
-//! Results are bit-identical for any thread count.
+//! Compression fan-out and the serving coordinator's scoring backends
+//! share it (`ServerOpts::threads` carries the same value), and results
+//! are bit-identical for any thread count.
 
 use anyhow::{bail, Result};
 use drank::calib::CalibOpts;
@@ -272,6 +274,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline: args
             .opt_usize("deadline-ms")
             .map(|ms| std::time::Duration::from_millis(ms as u64)),
+        // main() already sized the pool from --threads; pass an explicit
+        // value through so ServerOpts-driven embedders get the same knob
+        threads: args.opt_usize("threads").unwrap_or(0),
         ..Default::default()
     };
     println!("spawning {} worker(s) on the {backend} backend", sopts.workers);

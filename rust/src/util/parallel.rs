@@ -10,6 +10,10 @@
 //!  - [`parallel_row_bands`]: split the rows of a row-major buffer into
 //!    one contiguous band per thread and hand each thread a disjoint
 //!    `&mut` band (GEMM / Gram row parallelism).
+//!  - [`parallel_pair_rows`]: hand each worker one *disjoint* (p,q) row
+//!    pair of a row-major buffer as two `&mut` row slices (the blocked
+//!    Jacobi row phase: each rotation of a tournament round owns exactly
+//!    two rows, and rounds are built so no two rotations share an index).
 //!
 //! **Bit-determinism contract:** every function here guarantees output
 //! bit-identical to a single-threaded run, for any thread count. That
@@ -127,6 +131,72 @@ where
     });
 }
 
+/// Run `f(pair_index, row_p, row_q)` once per (p, q) entry of `pairs`,
+/// handing it mutable access to rows p and q of a row-major `rows`×`cols`
+/// buffer. Pairs MUST be disjoint (no row index appears twice across the
+/// whole list) — checked up front — which is what makes the unsafe row
+/// split below sound and the scheduling embarrassingly parallel.
+///
+/// Each pair's computation reads and writes only its own two rows, so the
+/// result is bit-identical for any thread count (pairs are claimed through
+/// the same atomic work index as [`parallel_map`]; which thread runs a
+/// pair cannot influence any element's value).
+pub fn parallel_pair_rows<T, F>(
+    data: &mut [T],
+    rows: usize,
+    cols: usize,
+    pairs: &[(usize, usize)],
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T], &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "pair-row shape mismatch");
+    let mut seen = vec![false; rows];
+    for &(p, q) in pairs {
+        assert!(p < rows && q < rows && p != q, "bad row pair ({p},{q})");
+        assert!(!seen[p] && !seen[q], "row repeated across pairs ({p},{q})");
+        seen[p] = true;
+        seen[q] = true;
+    }
+    if cols == 0 || pairs.is_empty() {
+        return;
+    }
+    let base = data.as_mut_ptr() as usize;
+    let run = |i: usize| {
+        let (p, q) = pairs[i];
+        // SAFETY: pairs are in range and disjoint (asserted above), so the
+        // two slices alias neither each other nor any other pair's rows,
+        // and every access stays inside `data`.
+        let rp = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut T).add(p * cols), cols)
+        };
+        let rq = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut T).add(q * cols), cols)
+        };
+        f(i, rp, rq);
+    };
+    let nthreads = threads().min(pairs.len());
+    if nthreads <= 1 {
+        for i in 0..pairs.len() {
+            run(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= pairs.len() {
+                    break;
+                }
+                run(i);
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +246,74 @@ mod tests {
             }
         });
         assert!(one.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn pair_rows_touch_exactly_their_rows() {
+        let (rows, cols) = (9, 5);
+        let mut data = vec![0i64; rows * cols];
+        // pairs cover rows {0,3,1,7,4,8}; rows 2, 5, 6 stay untouched
+        let pairs = [(0usize, 3usize), (1, 7), (4, 8)];
+        parallel_pair_rows(&mut data, rows, cols, &pairs, |i, rp, rq| {
+            for x in rp.iter_mut() {
+                *x += 100 * (i as i64 + 1) + 1;
+            }
+            for x in rq.iter_mut() {
+                *x += 100 * (i as i64 + 1) + 2;
+            }
+        });
+        for r in 0..rows {
+            let want = match r {
+                0 => 101,
+                3 => 102,
+                1 => 201,
+                7 => 202,
+                4 => 301,
+                8 => 302,
+                _ => 0,
+            };
+            for c in 0..cols {
+                assert_eq!(data[r * cols + c], want, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_rows_can_swap_row_contents() {
+        // reading one row while writing the other is the blocked-Jacobi
+        // access pattern; a swap exercises both directions at once
+        let (rows, cols) = (4, 3);
+        let mut data: Vec<u32> = (0..(rows * cols) as u32).collect();
+        let orig = data.clone();
+        parallel_pair_rows(&mut data, rows, cols, &[(0, 2), (1, 3)], |_, rp, rq| {
+            for j in 0..rp.len() {
+                std::mem::swap(&mut rp[j], &mut rq[j]);
+            }
+        });
+        for j in 0..cols {
+            assert_eq!(data[j], orig[2 * cols + j]);
+            assert_eq!(data[2 * cols + j], orig[j]);
+            assert_eq!(data[cols + j], orig[3 * cols + j]);
+            assert_eq!(data[3 * cols + j], orig[cols + j]);
+        }
+    }
+
+    #[test]
+    fn pair_rows_empty_inputs_are_no_ops() {
+        let mut data = vec![1.0f64; 12];
+        parallel_pair_rows(&mut data, 4, 3, &[], |_, _, _| panic!("no pairs"));
+        assert!(data.iter().all(|&x| x == 1.0));
+        let mut none: Vec<f64> = Vec::new();
+        parallel_pair_rows(&mut none, 4, 0, &[(0, 1)], |_, _, _| {
+            panic!("no cols, no calls")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "row repeated across pairs")]
+    fn pair_rows_reject_overlapping_pairs() {
+        let mut data = vec![0u8; 12];
+        parallel_pair_rows(&mut data, 4, 3, &[(0, 1), (1, 2)], |_, _, _| {});
     }
 
     #[test]

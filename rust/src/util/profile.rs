@@ -1,8 +1,11 @@
 //! Per-stage timing for the compression engine.
 //!
-//! Six stages cover the hot path end to end: calibration forward passes,
+//! Seven stages cover the hot path end to end: calibration forward passes,
 //! Gram formation (calib Gram accumulation + the A·Aᵀ / AᵀA products inside
-//! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve,
+//! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve — split
+//! into its sweep loop (`eigen_sweep`, the blocked-parallel part) and the
+//! final sort/permute (`eigen_sort`, sequential and cheap) so the profile
+//! shows exactly which part of the old `eigen` stage parallelized —
 //! truncation (factor extraction, including the unwhitening solve), and
 //! dense reconstruction. Counters are process-global atomics so they can be
 //! bumped from worker threads without plumbing a handle through every call;
@@ -25,22 +28,23 @@ pub enum Stage {
     Calib = 0,
     Gram = 1,
     Whiten = 2,
-    Eigen = 3,
-    Truncate = 4,
-    Reconstruct = 5,
+    EigenSweep = 3,
+    EigenSort = 4,
+    Truncate = 5,
+    Reconstruct = 6,
 }
 
-pub const STAGE_NAMES: [&str; 6] =
-    ["calib", "gram", "whiten", "eigen", "truncate", "reconstruct"];
+pub const STAGE_NAMES: [&str; 7] =
+    ["calib", "gram", "whiten", "eigen_sweep", "eigen_sort", "truncate", "reconstruct"];
 
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
-static NANOS: [AtomicU64; 6] = [ZERO; 6];
-static CALLS: [AtomicU64; 6] = [ZERO; 6];
+static NANOS: [AtomicU64; 7] = [ZERO; 7];
+static CALLS: [AtomicU64; 7] = [ZERO; 7];
 
 /// Zero all stage counters (call before a profiled run).
 pub fn reset() {
-    for i in 0..6 {
+    for i in 0..7 {
         NANOS[i].store(0, Ordering::Relaxed);
         CALLS[i].store(0, Ordering::Relaxed);
     }
@@ -95,7 +99,7 @@ pub struct CompressProfile {
 /// Read the counters into a [`CompressProfile`]. `wall_ms` is the caller's
 /// end-to-end wall time for the profiled region.
 pub fn snapshot(wall_ms: f64) -> CompressProfile {
-    let stages = (0..6)
+    let stages = (0..7)
         .map(|i| StageTiming {
             name: STAGE_NAMES[i],
             cpu_ms: NANOS[i].load(Ordering::Relaxed) as f64 / 1e6,
@@ -106,6 +110,16 @@ pub fn snapshot(wall_ms: f64) -> CompressProfile {
 }
 
 impl CompressProfile {
+    /// Total eigensolver cpu-ms (sweep + sort) — the quantity the perf
+    /// regression gate compares against its baseline.
+    pub fn eigen_ms(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.name.starts_with("eigen"))
+            .map(|s| s.cpu_ms)
+            .sum()
+    }
+
     /// Human-readable table for terminal output.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
@@ -161,14 +175,17 @@ mod tests {
         let before = snapshot(0.0);
         time(Stage::Gram, || std::hint::black_box(1 + 1));
         {
-            let _t = ScopedTimer::new(Stage::Eigen);
+            let _t = ScopedTimer::new(Stage::EigenSweep);
         }
+        time(Stage::EigenSort, || std::hint::black_box(2 + 2));
         let after = snapshot(1.0);
         let calls = |p: &CompressProfile, name: &str| {
             p.stages.iter().find(|s| s.name == name).unwrap().calls
         };
         assert!(calls(&after, "gram") >= calls(&before, "gram") + 1);
-        assert!(calls(&after, "eigen") >= calls(&before, "eigen") + 1);
+        assert!(calls(&after, "eigen_sweep") >= calls(&before, "eigen_sweep") + 1);
+        assert!(calls(&after, "eigen_sort") >= calls(&before, "eigen_sort") + 1);
+        assert!(after.eigen_ms() >= before.eigen_ms());
         assert_eq!(after.wall_ms, 1.0);
     }
 
@@ -180,7 +197,7 @@ mod tests {
         assert!(j.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
         assert_eq!(j.get("wall_ms").and_then(|v| v.as_f64()), Some(2.5));
         let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
-        assert_eq!(stages.len(), 6);
+        assert_eq!(stages.len(), 7);
         assert_eq!(stages[0].get("name").and_then(|v| v.as_str()), Some("calib"));
     }
 

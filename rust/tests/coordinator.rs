@@ -429,3 +429,47 @@ fn backend_construction_failure_fails_cleanly() {
     let err = server.shutdown().unwrap_err();
     assert!(format!("{err}").contains("boom"));
 }
+
+/// Records the process-wide pool size the backend sees while scoring —
+/// the observable effect of `ServerOpts::threads`.
+struct PoolProbeBackend {
+    seen: std::sync::Arc<std::sync::Mutex<Vec<usize>>>,
+}
+
+impl ScoreBackend for PoolProbeBackend {
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn nll(&self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.seen.lock().unwrap().push(drank::util::parallel::threads());
+        Ok(vec![0.0; (tokens.len() / 8) * 7])
+    }
+}
+
+#[test]
+fn server_opts_threads_sizes_the_shared_pool() {
+    // `threads` rides the same process-global knob as `--threads` on the
+    // compression side: ServerOpts::threads > 0 must be what the scoring
+    // backends observe, and the default (0) must leave the setting alone.
+    assert_eq!(ServerOpts::default().threads, 0, "default must not resize the pool");
+    let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let opts = ServerOpts {
+        workers: 1,
+        threads: 3,
+        batch_window: Duration::from_millis(0),
+        ..Default::default()
+    };
+    let probe = seen.clone();
+    let server = Server::spawn(move || Ok(PoolProbeBackend { seen: probe.clone() }), opts);
+    server.client().score(vec![1, 2, 3, 4]).unwrap();
+    server.shutdown().unwrap();
+    assert_eq!(*seen.lock().unwrap(), vec![3], "backend saw a differently sized pool");
+    // restore the default so later tests in this binary see a clean pool
+    drank::util::parallel::set_threads(0);
+    assert!(drank::util::parallel::threads() >= 1);
+}

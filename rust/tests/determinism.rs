@@ -1,8 +1,9 @@
 //! Determinism suite: parallel compression output must be bit-identical to
-//! a single-threaded run, across all six methods and both pipelines (plain
-//! and §4.1 compensated). This is the contract that lets `--threads N` be a
-//! pure speed knob — CI runs the whole test suite under a 1/4-thread
-//! `DRANK_THREADS` matrix on top of these explicit cross-count checks.
+//! a single-threaded run, across all six methods, both pipelines (plain
+//! and §4.1 compensated), and the blocked Jacobi eigensolver. This is the
+//! contract that lets `--threads N` be a pure speed knob — CI runs the
+//! whole test suite under a 1/4-thread `DRANK_THREADS` matrix on top of
+//! these explicit cross-count checks.
 //!
 //! The thread-pool size is process-global, so the tests that flip it hold a
 //! lock to serialize against each other (results are thread-count invariant
@@ -13,9 +14,12 @@ use std::sync::Mutex;
 use drank::calib::{CalibOpts, CalibStats};
 use drank::compress::{methods, pipeline, CompressOpts, Method};
 use drank::data::DataBundle;
+use drank::linalg::eigen::jacobi_eigen_blocked;
 use drank::model::lowrank::{CompressedModel, TypeRep};
 use drank::model::{ModelConfig, Weights};
+use drank::tensor::MatF;
 use drank::util::parallel::set_threads;
+use drank::util::rng::Rng;
 
 static THREAD_LOCK: Mutex<()> = Mutex::new(());
 
@@ -79,6 +83,37 @@ fn plain_pipeline_bit_identical_across_thread_counts() {
                 "{} factors diverged at {t} threads",
                 method.name()
             );
+        }
+    }
+    set_threads(0);
+}
+
+#[test]
+fn blocked_eigensolver_bit_identical_across_thread_counts() {
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let mut rng = Rng::new(9);
+    // sizes straddle the band/pair split boundaries: odd (tournament bye),
+    // pool-sized, and larger-than-pool
+    for n in [5usize, 33, 96] {
+        let mut a = MatF::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.normal();
+                *a.at_mut(i, j) = x;
+                *a.at_mut(j, i) = x;
+            }
+        }
+        set_threads(1);
+        let e1 = jacobi_eigen_blocked(&a);
+        let vals1: Vec<u64> = e1.values.iter().map(|x| x.to_bits()).collect();
+        let vecs1: Vec<u64> = e1.vectors.data.iter().map(|x| x.to_bits()).collect();
+        for t in [2usize, 4] {
+            set_threads(t);
+            let et = jacobi_eigen_blocked(&a);
+            let valst: Vec<u64> = et.values.iter().map(|x| x.to_bits()).collect();
+            let vecst: Vec<u64> = et.vectors.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(vals1, valst, "eigenvalues diverged at {t} threads (n={n})");
+            assert_eq!(vecs1, vecst, "eigenvectors diverged at {t} threads (n={n})");
         }
     }
     set_threads(0);
