@@ -1,14 +1,17 @@
 //! Figure 4: serving throughput (tokens/sec) of the dense model vs
 //! compressed models at ratios 20–50%, through the coordinator over
 //! runtime-compiled factored graphs — plus a worker-count scaling curve
-//! over the pure-Rust reference backend.
+//! over the pure-Rust reference backend, and a factored-vs-dense
+//! crossover curve (Figure 4c) over the same backend.
 //!
 //! Expected shape: every compressed model >= dense; throughput increases
 //! with the compression ratio; D-Rank >= Basis Sharing (its allocations
 //! skew rank toward cheap, high-value groups). On the scaling curve,
 //! aggregate throughput rises with the worker count until the machine's
-//! cores saturate (the reference forward is single-threaded per worker,
-//! so workers scale near-linearly at small N).
+//! cores saturate. On the crossover curve, factored serving (two skinny
+//! GEMMs, no weight rematerialization) must match or beat the
+//! dense-reconstructed path once the ratio reaches 20% — the rank cut
+//! makes (x·B)·C strictly less work than x·W.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -138,4 +141,35 @@ fn main() {
         eprintln!("ref backend, {wk} worker(s): {tput:.0} tok/s");
     }
     common::emit(&ts, "fig4_throughput_scaling");
+
+    // ---- factored vs dense-reconstructed serving (reference backend) ------
+    // The same compressed model served two ways: on its factors directly
+    // (`RefBackend`'s factored mode) and as a dense passthrough of its
+    // `to_dense()` reconstruction. Acceptance bar: factored >= dense at
+    // every ratio >= 0.2 — the factored projections do strictly less work.
+    let cross_requests = common::env_usize("DRANK_CROSS_REQUESTS", 64);
+    let mut tc = Table::new(
+        "Figure 4c: factored vs dense-reconstructed serving (reference backend)",
+        &["Ratio", "factored tok/s", "dense tok/s", "factored/dense"],
+    );
+    for &ratio in &ratios {
+        let model = b.compress(&stats, &common::opts(Method::DRank, ratio, 2));
+        let reconstructed = CompressedModel::dense_passthrough(model.to_dense());
+        let mf = serve(model, &stream, cross_requests, "ref", 1);
+        let md = serve(reconstructed, &stream, cross_requests, "ref", 1);
+        let (tf, td) = (mf.throughput_tps(), md.throughput_tps());
+        tc.row(vec![
+            format!("{:.0}%", ratio * 100.0),
+            format!("{tf:.0}"),
+            format!("{td:.0}"),
+            format!("{:.2}", tf / td),
+        ]);
+        eprintln!("ref backend, ratio {ratio:.1}: factored {tf:.0} vs dense {td:.0} tok/s");
+        assert!(
+            tf >= td * 0.95,
+            "factored serving ({tf:.0} tok/s) fell behind dense reconstruction \
+             ({td:.0} tok/s) at ratio {ratio} — the low-rank path should do less work"
+        );
+    }
+    common::emit(&tc, "fig4_throughput_factored");
 }

@@ -6,19 +6,24 @@
 //!
 //!  1. single-thread hot-path rows (the historical table),
 //!  2. thread-scaling rows — the same op at 1 vs 4 threads, asserting the
-//!     outputs are byte-identical while reporting the speedup,
+//!     outputs are byte-identical while reporting the speedup (this now
+//!     includes the batched serving forward, dense and factored),
 //!  3. a per-stage `CompressProfile` of a full artifact-free compression
-//!     run on the `tiny` config.
+//!     run on the `tiny` config,
+//!  4. a factored-vs-dense-reconstructed ref-serving comparison on `tiny`
+//!     (written standalone as `runs/reports/serve_factored_tiny.json`;
+//!     the factored run must never touch the `Reconstruct` stage).
 //!
 //! Everything is folded into `runs/reports/BENCH_perf_hotpath.json` (the
 //! bench trajectory artifact CI uploads; the per-stage profile is also
 //! written standalone as `runs/reports/compress_profile_tiny.json`) and
 //! gated against the checked-in baseline
 //! `rust/benches/baselines/BENCH_perf_hotpath.json`: any op — or the
-//! summed eigen_sweep+eigen_sort stage — slower than 3x its baseline fails
-//! the bench. `DRANK_PERF_BASELINE` overrides the baseline path.
-//! `DRANK_FAST=1` lowers repetition counts only — sizes stay fixed so
-//! timings remain comparable against the baseline.
+//! summed eigen_sweep+eigen_sort stage, or the summed fwd+fwd_lowrank
+//! stage — slower than 3x its baseline fails the bench.
+//! `DRANK_PERF_BASELINE` overrides the baseline path. `DRANK_FAST=1`
+//! lowers repetition counts only — sizes stay fixed so timings remain
+//! comparable against the baseline.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -226,7 +231,126 @@ fn main() {
             "cyclic reference".into(),
         ]);
     }
+    // batched serving forward on `tiny`: dense (y = x·W) vs factored
+    // ((x·B)·C), both byte-identical across thread counts
+    {
+        use drank::model::fwd;
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 5);
+        let stats = CalibStats::synthetic(&cfg, 6);
+        let o = common::opts(Method::DRank, 0.3, 2);
+        let (model, _) = drank::compress::methods::compress(&w, &stats, &o).unwrap();
+        let toks: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        set_threads(1);
+        let want_d = bits(&fwd::nll(&w, &toks, cfg.batch, cfg.seq));
+        let want_f = bits(&fwd::nll_model(&model, &toks, cfg.batch, cfg.seq));
+        set_threads(4);
+        assert_eq!(
+            bits(&fwd::nll(&w, &toks, cfg.batch, cfg.seq)),
+            want_d,
+            "dense forward not thread-invariant"
+        );
+        assert_eq!(
+            bits(&fwd::nll_model(&model, &toks, cfg.batch, cfg.seq)),
+            want_f,
+            "factored forward not thread-invariant"
+        );
+        let (t1, t4) = scale_pair(|| { let _ = fwd::nll(&w, &toks, cfg.batch, cfg.seq); }, reps);
+        t.row(vec![
+            "fwd_dense".into(),
+            format!("tiny {}x{} @1->4T", cfg.batch, cfg.seq),
+            format!("{t1:.1} -> {t4:.1}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("fwd_dense_tiny".into(), t1, t4));
+        let (t1, t4) =
+            scale_pair(|| { let _ = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq); }, reps);
+        t.row(vec![
+            "fwd_factored".into(),
+            format!("tiny drank 0.3 {}x{} @1->4T", cfg.batch, cfg.seq),
+            format!("{t1:.1} -> {t4:.1}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("fwd_factored_tiny".into(), t1, t4));
+    }
     set_threads(configured);
+
+    // factored vs dense-reconstructed ref serving on `tiny`: same requests
+    // through `spawn_model_server`, once on the factors (which must never
+    // call the Reconstruct stage) and once on a dense passthrough of the
+    // reconstructed weights
+    {
+        use drank::coordinator::{spawn_model_server, ServerOpts};
+        use drank::model::lowrank::CompressedModel;
+        use drank::util::profile::{stage_calls, Stage};
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 5);
+        let stats = CalibStats::synthetic(&cfg, 6);
+        let o = common::opts(Method::DRank, 0.3, 2);
+        let (model, _) = drank::compress::methods::compress(&w, &stats, &o).unwrap();
+        let ratio = model.achieved_ratio();
+        let dense = CompressedModel::dense_passthrough(model.to_dense());
+        let requests = if common::fast() { 16 } else { 48 };
+        let run = |m: CompressedModel| {
+            let recon0 = stage_calls(Stage::Reconstruct);
+            let server = spawn_model_server(
+                m,
+                cfg.batch,
+                cfg.seq,
+                "ref",
+                ServerOpts { workers: 2, ..Default::default() },
+            )
+            .expect("spawn ref server");
+            let handles: Vec<_> = (0..requests)
+                .map(|i| {
+                    let c = server.client();
+                    let seq = cfg.seq;
+                    std::thread::spawn(move || {
+                        c.score(vec![(i % 250 + 1) as u32; seq]).expect("score")
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let m = server.shutdown().expect("shutdown");
+            (m.throughput_tps(), stage_calls(Stage::Reconstruct) - recon0)
+        };
+        let (tps_f, recon_f) = run(model);
+        let (tps_d, recon_d) = run(dense);
+        assert_eq!(recon_f, 0, "factored ref serving called the Reconstruct stage");
+        t.row(vec![
+            "serve(ref,factored)".into(),
+            format!("tiny drank {ratio:.2}, {requests} req"),
+            format!("{tps_f:.0} tok/s"),
+            "serves factors directly".into(),
+        ]);
+        t.row(vec![
+            "serve(ref,dense)".into(),
+            format!("tiny reconstructed, {requests} req"),
+            format!("{tps_d:.0} tok/s"),
+            "to_dense() baseline".into(),
+        ]);
+        std::fs::create_dir_all("runs/reports").expect("mkdir runs/reports");
+        std::fs::write(
+            "runs/reports/serve_factored_tiny.json",
+            Json::obj(vec![
+                ("model", Json::str("tiny")),
+                ("method", Json::str("drank")),
+                ("ratio", Json::num(ratio)),
+                ("requests", Json::num(requests as f64)),
+                ("factored_tps", Json::num(tps_f)),
+                ("dense_tps", Json::num(tps_d)),
+                ("factored_reconstruct_calls", Json::num(recon_f as f64)),
+                ("dense_reconstruct_calls", Json::num(recon_d as f64)),
+            ])
+            .emit(),
+        )
+        .expect("write serve_factored_tiny.json");
+        eprintln!("[bench] wrote runs/reports/serve_factored_tiny.json");
+    }
 
     // per-stage profile: artifact-free end-to-end compression on `tiny`
     let prof = {
@@ -361,6 +485,22 @@ fn main() {
                 }
             } else {
                 eprintln!("[bench] baseline has no profile.eigen_cpu_ms; skipping eigen gate");
+            }
+            // forward-stage gate: summed fwd+fwd_lowrank cpu-ms of the same
+            // profile (the reference calibration inside the tiny compress
+            // runs the batched forward), same 3x rule
+            if let Some(want) =
+                base.get("profile").and_then(|p| p.get("fwd_cpu_ms")).and_then(|v| v.as_f64())
+            {
+                let got = prof.fwd_ms();
+                if got > want * 3.0 {
+                    eprintln!(
+                        "[bench] REGRESSION fwd stage: {got:.2} cpu-ms > 3x baseline {want:.2} cpu-ms"
+                    );
+                    failed = true;
+                }
+            } else {
+                eprintln!("[bench] baseline has no profile.fwd_cpu_ms; skipping fwd gate");
             }
             if failed {
                 std::process::exit(1);

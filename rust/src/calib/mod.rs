@@ -166,12 +166,51 @@ pub fn run_reference(
     data: &DataBundle,
     opts: &CalibOpts,
 ) -> Result<CalibStats> {
+    run_reference_with(weights.config, data, opts, |batch, part| {
+        crate::model::fwd::accumulate_calib(
+            weights,
+            batch,
+            weights.config.batch,
+            weights.config.seq,
+            part,
+        )
+    })
+}
+
+/// [`run_reference`] over a compressed model: the instrumented forward
+/// consumes each factored site's (B, C) directly via the `Linear` operator
+/// (`model::fwd::accumulate_calib_model`), so compensated recalibration
+/// observes the compressed network without ever reconstructing dense
+/// weights.
+pub fn run_reference_model(
+    model: &crate::model::lowrank::CompressedModel,
+    data: &DataBundle,
+    opts: &CalibOpts,
+) -> Result<CalibStats> {
+    run_reference_with(model.config(), data, opts, |batch, part| {
+        crate::model::fwd::accumulate_calib_model(
+            model,
+            batch,
+            model.config().batch,
+            model.config().seq,
+            part,
+        )
+    })
+}
+
+/// Shared body of the reference calibration paths, parameterized by the
+/// per-batch forward (dense weights or a compressed model).
+fn run_reference_with(
+    cfg: crate::model::ModelConfig,
+    data: &DataBundle,
+    opts: &CalibOpts,
+    forward: impl Fn(&[i32], &mut crate::model::fwd::CalibSums) + Sync,
+) -> Result<CalibStats> {
     let _t = profile::ScopedTimer::new(Stage::Calib);
     anyhow::ensure!(
         !opts.fisher,
         "fisher statistics need the AOT fisher artifact; use the PJRT calibration path"
     );
-    let cfg = weights.config;
     let stream = &data.domain(opts.domain).train;
     let mut batcher = Batcher::new(stream, cfg.batch, cfg.seq, opts.seed);
     // Batches are drawn up front (the batcher is stateful, so draw order
@@ -185,7 +224,7 @@ pub fn run_reference(
     for chunk in batches.chunks(wave) {
         let partials = parallel_map(chunk.to_vec(), |batch| {
             let mut part = crate::model::fwd::CalibSums::new(&cfg);
-            crate::model::fwd::accumulate_calib(weights, &batch, cfg.batch, cfg.seq, &mut part);
+            forward(&batch, &mut part);
             part
         });
         for p in &partials {

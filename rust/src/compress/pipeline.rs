@@ -3,17 +3,19 @@
 //! layer weights using the deviated inputs", §4.1).
 //!
 //! Compensated flow: layer blocks are compressed front-to-back; before each
-//! block, calibration re-runs with the *already-compressed* prefix (via
-//! dense reconstruction), so downstream whitening sees the deviated
-//! activations. Rank allocation is decided once up front from the clean
-//! statistics (the deviation shifts whitening, not the information-density
-//! ordering).
+//! block, calibration re-runs with the *already-compressed* prefix, so
+//! downstream whitening sees the deviated activations. Rank allocation is
+//! decided once up front from the clean statistics (the deviation shifts
+//! whitening, not the information-density ordering).
 //!
-//! Recalibration is a pluggable seam ([`compensated_with`]): production
-//! streams batches through the AOT calib artifact over PJRT, while the
-//! reference path ([`compress_model_reference`]) uses the instrumented
-//! pure-Rust forward — so the whole pipeline runs (and is tested) with no
-//! `artifacts/` directory.
+//! Recalibration is a pluggable seam ([`compensated_with`]): the provider
+//! receives the partially-compressed model itself. The reference path
+//! ([`compress_model_reference`]) runs the instrumented pure-Rust forward
+//! *on the factors directly* (`calib::run_reference_model` — no dense
+//! reconstruction, no `Reconstruct` stage calls), so the whole pipeline
+//! runs (and is tested) with no `artifacts/` directory; the PJRT provider
+//! reconstructs dense weight literals internally because the AOT calib
+//! artifact requires them.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -53,7 +55,7 @@ pub fn compress_model_reference(
     if !opts.compensate {
         return compress(weights, &stats, opts);
     }
-    compensated_with(weights, stats, opts, |w| calib::run_reference(w, data, copts))
+    compensated_with(weights, stats, opts, |m| calib::run_reference_model(m, data, copts))
 }
 
 /// Compress given pre-computed statistics; dispatches on compensation.
@@ -68,17 +70,21 @@ pub fn compress_with_stats(
     if !opts.compensate {
         return compress(weights, &stats, opts);
     }
-    compensated_with(weights, stats, opts, |w| calib::run(engine, w, data, copts))
+    // the AOT calib artifact takes dense weight literals, so the PJRT
+    // provider reconstructs; the reference provider never does
+    compensated_with(weights, stats, opts, |m| {
+        calib::run(engine, &m.to_dense(), data, copts)
+    })
 }
 
 /// The §4.1 sequential-compensation loop over a pluggable recalibration
 /// provider: `recalib` is invoked with the partially-compressed model
-/// (reconstructed dense) before each block after the first.
+/// before each block after the first.
 pub fn compensated_with(
     weights: &Weights,
     stats0: CalibStats,
     opts: &CompressOpts,
-    mut recalib: impl FnMut(&Weights) -> Result<CalibStats>,
+    mut recalib: impl FnMut(&CompressedModel) -> Result<CalibStats>,
 ) -> Result<(CompressedModel, RankPlan)> {
     opts.validate()?;
     let cfg = weights.config;
@@ -123,9 +129,9 @@ pub fn compensated_with(
     let mut stats = stats0;
     for (bi, &(bstart, blen)) in blocks.iter().enumerate() {
         if bi > 0 {
-            // recalibrate with the compressed prefix reconstructed dense
-            let current = model.to_dense();
-            stats = recalib(&current)?;
+            // recalibrate with the compressed prefix (the provider decides
+            // whether it needs dense weights; the reference one doesn't)
+            stats = recalib(&model)?;
             svds0 = None; // deviated stats: planning SVDs no longer valid
         }
         // collect this block's group work items: (typ, gi, gstart, glen, k, d2)

@@ -4,10 +4,13 @@
 //! Two implementations ship:
 //!  - [`CompiledForward`] (the runtime-built XLA graph over PJRT) — the
 //!    production path the paper's throughput numbers come from;
-//!  - [`RefBackend`] — the pure-Rust reference forward (`model::fwd::nll`),
+//!  - [`RefBackend`] — the pure-Rust batched forward (`model::fwd`),
 //!    which needs no artifacts, no PJRT, and is `Send`-free-constructible
-//!    inside any worker thread. It is both the test oracle for the
-//!    coordinator suite and a real (if slow) serving backend: unlike the
+//!    inside any worker thread. It scores either dense weights
+//!    ([`RefBackend::new`]/[`RefBackend::shared`]) or a compressed model's
+//!    factors directly ([`RefBackend::factored`] → `fwd::nll_model`,
+//!    never materializing dense weights), and is both the test oracle for
+//!    the coordinator suite and a real serving backend: unlike the
 //!    fixed-shape compiled graph it can score partial batches without
 //!    padding them out to full batch capacity.
 //!
@@ -19,6 +22,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::graph::CompiledForward;
+use crate::model::lowrank::CompressedModel;
 use crate::model::{fwd, Weights};
 
 /// A batched scoring backend: fixed `[batch, seq]` windows in, per-token
@@ -91,11 +95,34 @@ impl ScoreBackend for CompiledForward {
     }
 }
 
-/// Pure-Rust reference backend over dense weights (compressed models are
-/// reconstructed W ≈ B·C first — numerically equivalent, see the
-/// integration tests). Runs with no `artifacts/` directory and no PJRT.
+/// Weight source of a [`RefBackend`]: plain dense weights, or a compressed
+/// model served on its factors.
+enum RefModel {
+    Dense(Arc<Weights>),
+    Factored(Arc<CompressedModel>),
+}
+
+impl RefModel {
+    fn config(&self) -> &crate::model::ModelConfig {
+        match self {
+            RefModel::Dense(w) => &w.config,
+            RefModel::Factored(m) => &m.base.config,
+        }
+    }
+
+    fn nll(&self, tokens: &[i32], rows: usize, seq: usize) -> Vec<f32> {
+        match self {
+            RefModel::Dense(w) => fwd::nll(w, tokens, rows, seq),
+            RefModel::Factored(m) => fwd::nll_model(m, tokens, rows, seq),
+        }
+    }
+}
+
+/// Pure-Rust reference backend: dense weights, or a compressed model whose
+/// factored sites execute `(x·B)·C` directly — serving never calls
+/// `to_dense()`. Runs with no `artifacts/` directory and no PJRT.
 pub struct RefBackend {
-    weights: Arc<Weights>,
+    model: RefModel,
     batch: usize,
     seq: usize,
 }
@@ -110,20 +137,29 @@ impl RefBackend {
     /// N-worker server should reconstruct/load once and pass clones of
     /// the `Arc` instead of paying N copies.
     pub fn shared(weights: Arc<Weights>, batch: usize, seq: usize) -> Self {
-        assert!(batch >= 1, "batch must be >= 1");
-        assert!(seq >= 2, "seq must be >= 2 (NLL predicts positions 1..seq)");
-        Self { weights, batch, seq }
+        Self::build(RefModel::Dense(weights), batch, seq)
     }
 
-}
+    /// Serve a compressed model on its factors: every factored projection
+    /// runs as two skinny GEMMs through the `Linear` operator and the
+    /// removed parameters are never rematerialized (profile stage
+    /// `fwd_lowrank` counts these; `reconstruct` stays at zero).
+    pub fn factored(model: Arc<CompressedModel>, batch: usize, seq: usize) -> Self {
+        Self::build(RefModel::Factored(model), batch, seq)
+    }
 
-impl RefBackend {
+    fn build(model: RefModel, batch: usize, seq: usize) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(seq >= 2, "seq must be >= 2 (NLL predicts positions 1..seq)");
+        Self { model, batch, seq }
+    }
+
     /// The reference forward indexes the embedding by raw token id, so an
-    /// out-of-range id would panic deep inside `fwd::nll` — turn it into
+    /// out-of-range id would panic deep inside the forward — turn it into
     /// an error here (the coordinator normally screens ids first; this is
     /// the belt-and-suspenders for direct library users).
     fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
-        let v = self.weights.config.vocab;
+        let v = self.model.config().vocab;
         if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= v) {
             anyhow::bail!("token id {bad} outside vocabulary of {v}");
         }
@@ -141,7 +177,7 @@ impl ScoreBackend for RefBackend {
     }
 
     fn vocab(&self) -> Option<usize> {
-        Some(self.weights.config.vocab)
+        Some(self.model.config().vocab)
     }
 
     fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -152,7 +188,7 @@ impl ScoreBackend for RefBackend {
             self.seq
         );
         self.check_tokens(tokens)?;
-        Ok(fwd::nll(&self.weights, tokens, self.batch, self.seq))
+        Ok(self.model.nll(tokens, self.batch, self.seq))
     }
 
     fn is_shape_flexible(&self) -> bool {
@@ -170,7 +206,7 @@ impl ScoreBackend for RefBackend {
         );
         assert_eq!(tokens.len(), rows * used_seq, "tokens must be [rows, used_seq]");
         self.check_tokens(tokens)?;
-        Ok(fwd::nll(&self.weights, tokens, rows, used_seq))
+        Ok(self.model.nll(tokens, rows, used_seq))
     }
 }
 
@@ -235,6 +271,35 @@ mod tests {
         }
         fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
             self.0.nll(tokens)
+        }
+    }
+
+    #[test]
+    fn factored_backend_matches_dense_reconstruction() {
+        // serve the same compressed model both ways: on its factors and on
+        // the reconstructed dense weights — scores must agree to f32
+        // association tolerance (the never-calls-Reconstruct property is
+        // asserted in rust/tests/coordinator.rs, where stage counters
+        // aren't raced by unrelated lib tests)
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 15);
+        let stats = crate::calib::CalibStats::synthetic(&cfg, 9);
+        let opts = crate::compress::CompressOpts {
+            method: crate::compress::Method::DRank,
+            ratio: 0.3,
+            group_layers: 2,
+            ..Default::default()
+        };
+        let (model, _) = crate::compress::methods::compress(&w, &stats, &opts).unwrap();
+        let dense = RefBackend::new(model.to_dense(), cfg.batch, cfg.seq);
+        let fact = RefBackend::factored(Arc::new(model), cfg.batch, cfg.seq);
+        let toks: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| ((i * 7) % cfg.vocab) as i32).collect();
+        let a = fact.nll(&toks).unwrap();
+        let b = dense.nll(&toks).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-2, "{x} vs {y}");
         }
     }
 

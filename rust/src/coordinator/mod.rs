@@ -477,11 +477,14 @@ impl Drop for Server {
 }
 
 /// Spawn a server for a (possibly compressed) model on the named backend:
-/// `"ref"` (pure-Rust reference forward, artifact-free) or `"xla"`
-/// (runtime-compiled PJRT graph). One dense reconstruction is shared by
-/// all reference workers; XLA workers each compile their own graph (PJRT
-/// handles are `!Send`). The single seam every serving driver goes
-/// through (CLI, examples, benches).
+/// `"ref"` (pure-Rust batched forward, artifact-free) or `"xla"`
+/// (runtime-compiled PJRT graph). Reference workers share one model `Arc`
+/// and serve factored weights *directly* — a compressed model's removed
+/// parameters are never rematerialized (no `to_dense()`, no `Reconstruct`
+/// stage calls); a model with no factored types serves its dense base
+/// weights. XLA workers each compile their own graph (PJRT handles are
+/// `!Send`). The single seam every serving driver goes through (CLI,
+/// examples, benches).
 pub fn spawn_model_server(
     model: crate::model::lowrank::CompressedModel,
     batch: usize,
@@ -489,13 +492,22 @@ pub fn spawn_model_server(
     backend: &str,
     opts: ServerOpts,
 ) -> Result<Server> {
+    use crate::model::lowrank::TypeRep;
     match backend {
         "ref" => {
-            let dense = Arc::new(model.to_dense());
-            Ok(Server::spawn(
-                move || Ok(RefBackend::shared(dense.clone(), batch, seq)),
-                opts,
-            ))
+            if model.reps.values().any(|r| matches!(r, TypeRep::Factored(_))) {
+                let m = Arc::new(model);
+                Ok(Server::spawn(
+                    move || Ok(RefBackend::factored(m.clone(), batch, seq)),
+                    opts,
+                ))
+            } else {
+                let w = Arc::new(model.base);
+                Ok(Server::spawn(
+                    move || Ok(RefBackend::shared(w.clone(), batch, seq)),
+                    opts,
+                ))
+            }
         }
         "xla" => Ok(Server::spawn(
             move || {

@@ -2,9 +2,12 @@
 //!
 //! PPL runs token streams through the AOT `dense_nll` artifact (compressed
 //! models are reconstructed W ≈ B·C first — numerically equivalent to the
-//! factored graph, see the integration tests). Zero-shot scoring follows
-//! LM-Evaluation-Harness: each option is scored by length-normalized
-//! log-likelihood as a continuation of the prompt, highest wins.
+//! factored graph, see the integration tests), or — artifact-free — through
+//! the pure-Rust forward: [`ppl_reference`] scores a compressed model on
+//! its factors directly (`model::fwd::nll_model`), never materializing
+//! dense weights. Zero-shot scoring follows LM-Evaluation-Harness: each
+//! option is scored by length-normalized log-likelihood as a continuation
+//! of the prompt, highest wins.
 
 pub mod tasks;
 
@@ -43,6 +46,10 @@ pub fn ppl_dense(
 }
 
 /// Perplexity of a compressed model (dense reconstruction path).
+///
+/// This PJRT path genuinely needs dense weights — the AOT `dense_nll`
+/// artifact takes weight literals, not factors. For artifact-free factored
+/// evaluation use [`ppl_reference`].
 pub fn ppl_compressed(
     engine: &Engine,
     model: &CompressedModel,
@@ -51,6 +58,28 @@ pub fn ppl_compressed(
 ) -> Result<f64> {
     let dense = model.to_dense();
     ppl_dense(engine, &dense, stream, max_batches)
+}
+
+/// Perplexity of a compressed model through the pure-Rust forward,
+/// consuming factored weights directly (no PJRT, no `Reconstruct` calls).
+/// Batches run sequentially; the forward itself row-band-parallelizes on
+/// the shared pool, so the result is bit-identical for any thread count.
+pub fn ppl_reference(
+    model: &CompressedModel,
+    stream: &[u32],
+    max_batches: usize,
+) -> Result<f64> {
+    let cfg = model.config();
+    let batches = Batcher::eval_batches(stream, cfg.batch, cfg.seq, max_batches);
+    anyhow::ensure!(!batches.is_empty(), "stream too short for evaluation");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for batch in &batches {
+        let nll = crate::model::fwd::nll_model(model, batch, cfg.batch, cfg.seq);
+        total += nll.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.len();
+    }
+    Ok((total / count as f64).exp())
 }
 
 /// Sum of log-likelihoods of `cont` tokens following `prompt` tokens,

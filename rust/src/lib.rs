@@ -18,6 +18,10 @@
 //! graph (`graph::CompiledForward`); `coordinator::RefBackend` wraps the
 //! pure-Rust reference forward (`model::fwd`) so the coordinator — and its
 //! test suite — runs with no `artifacts/` directory and no PJRT at all.
+//! The reference forward itself is batched: every projection site resolves
+//! to a `model::lowrank::Linear` operator (dense slab or `B`/`C` factor
+//! pair), so `RefBackend` serves compressed models on their factors
+//! directly — removed parameters are never rematerialized.
 //! Batches are assembled per worker with length bucketing, per-request
 //! deadlines, and typed `QueueFull`/`Timeout`/`TooLong` rejection; shutdown
 //! drains every queued request before the workers exit.

@@ -15,7 +15,11 @@
 //! `serve --backend ref` runs the coordinator over the pure-Rust reference
 //! forward — no `artifacts/` directory or PJRT needed (it even falls back
 //! to random-init weights when no checkpoint exists, so a bare checkout
-//! can exercise the full serving stack).
+//! can exercise the full serving stack). With `--ratio > 0` the reference
+//! backend serves the **factored** weights directly: every projection runs
+//! as two skinny GEMMs (x·B)·C and the dense matrices are never
+//! rematerialized (no `Reconstruct` stage calls — the `fwd_lowrank`
+//! profile stage carries the work instead).
 //!
 //! `--threads N` sizes the one process-wide thread pool (any command;
 //! defaults to the machine's available parallelism, or `DRANK_THREADS`).
@@ -261,7 +265,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )?;
             m
         };
-        println!("serving compressed model (ratio {:.2})", m.achieved_ratio());
+        if backend == "ref" {
+            println!(
+                "serving compressed model (ratio {:.2}) on its factors — dense weights \
+                 are never rematerialized",
+                m.achieved_ratio()
+            );
+        } else {
+            println!("serving compressed model (ratio {:.2})", m.achieved_ratio());
+        }
         m
     } else {
         drank::model::lowrank::CompressedModel::dense_passthrough(weights)

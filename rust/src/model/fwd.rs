@@ -1,13 +1,25 @@
-//! Pure-Rust reference forward pass (test oracle + reference backend).
+//! Pure-Rust reference forward pass (test oracle + serving backend).
 //!
-//! A direct, loop-level port of `python/compile/model.py` used to
-//! cross-check the AOT artifacts and the runtime-built XLA graphs at tiny
-//! sizes, to back the coordinator's artifact-free `RefBackend`, and — via
-//! the [`CalibSums`] observer — to collect calibration statistics without
-//! the PJRT `calib` artifact. Single-threaded f32; not a performance path.
+//! Functionally a port of `python/compile/model.py`, used to cross-check
+//! the AOT artifacts and the runtime-built XLA graphs at tiny sizes, to
+//! back the coordinator's artifact-free `RefBackend`, and — via the
+//! [`CalibSums`] observer — to collect calibration statistics without the
+//! PJRT `calib` artifact.
+//!
+//! Execution is batched, not scalar: every projection site resolves to a
+//! [`Linear`] operator and runs as a row-band-parallel GEMM over all
+//! `batch·t` activation rows at once (`tensor::matmul::gemm_f32` on the
+//! `util::parallel` pool). The same forward therefore serves *dense*
+//! weights ([`nll`]) and *factored* compressed models ([`nll_model`]) —
+//! a factored site executes `(x·B)·C` directly and never rematerializes
+//! the dense weight. Per-row floating-point order is independent of the
+//! band split, so all outputs are bit-identical for any thread count
+//! (enforced by `rust/tests/forward_equivalence.rs`).
 
+use super::lowrank::{CompressedModel, Linear};
 use super::{ModelConfig, Weights};
 use crate::tensor::MatF;
+use crate::util::parallel::parallel_row_bands;
 
 const EPS: f32 = 1e-5;
 const ROPE_THETA: f32 = 1e4;
@@ -19,6 +31,38 @@ const SLOT_ATTN: usize = 0;
 const SLOT_O: usize = 1;
 const SLOT_MLP: usize = 2;
 const SLOT_DOWN: usize = 3;
+
+/// Parameter source for one forward pass: plain dense weights or a
+/// compressed model whose factored sites run on their factors. All the
+/// block code below is written against this, so dense and factored
+/// execution share every instruction except the [`Linear::matmul`]
+/// dispatch.
+#[derive(Clone, Copy)]
+enum Params<'a> {
+    Dense(&'a Weights),
+    Model(&'a CompressedModel),
+}
+
+impl<'a> Params<'a> {
+    fn weights(&self) -> &'a Weights {
+        match self {
+            Params::Dense(w) => w,
+            Params::Model(m) => &m.base,
+        }
+    }
+
+    /// The [`Linear`] operator serving (type, layer).
+    fn linear(&self, typ: &str, l: usize) -> Linear<'a> {
+        match self {
+            Params::Dense(w) => {
+                let (d1, d2) = w.config.matrix_dims(typ);
+                let t = &w.tensors[ModelConfig::param_index(typ)];
+                Linear::Dense { w: &t.data[l * d1 * d2..(l + 1) * d1 * d2], d1, d2 }
+            }
+            Params::Model(m) => m.linear(typ, l),
+        }
+    }
+}
 
 /// Raw calibration sums accumulated by the instrumented forward:
 /// un-normalized Σ x·xᵀ per (slot, layer) and Σ|x| per (slot, layer, dim),
@@ -64,6 +108,15 @@ impl CalibSums {
         }
     }
 
+    /// Accumulate every row of a `rows`×`d` activation buffer, in row
+    /// order (b-major, position-minor — the order the scalar forward
+    /// recorded in, so sums stay bit-identical to the historical path).
+    fn record_rows(&mut self, slot: usize, layer: usize, x: &[f32], d: usize) {
+        for row in x.chunks_exact(d) {
+            self.record(slot, layer, row);
+        }
+    }
+
     /// Fold another accumulator into this one (elementwise sums). The
     /// parallel calibration path computes one `CalibSums` per batch and
     /// merges them in batch order, so results don't depend on thread count.
@@ -94,41 +147,58 @@ pub fn accumulate_calib(
 ) {
     // the AOT calib artifact embeds the full [B, S] window (no next-token
     // trim), so statistics cover all `seq` positions — mirror that exactly
-    let _ = forward_hidden_obs(w, tokens, batch, seq, seq, Some(sums));
+    let _ = forward_hidden_obs(Params::Dense(w), tokens, batch, seq, seq, Some(sums));
+    sums.tokens += batch * seq;
+}
+
+/// [`accumulate_calib`] over a compressed model: factored sites run on
+/// their factors, so compensated recalibration observes the compressed
+/// network without reconstructing dense weights.
+pub fn accumulate_calib_model(
+    m: &CompressedModel,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    sums: &mut CalibSums,
+) {
+    let _ = forward_hidden_obs(Params::Model(m), tokens, batch, seq, seq, Some(sums));
     sums.tokens += batch * seq;
 }
 
 /// Per-token NLL for a [batch, seq] token matrix; returns [batch, seq-1].
 pub fn nll(w: &Weights, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
-    let cfg = w.config;
+    nll_impl(Params::Dense(w), tokens, batch, seq)
+}
+
+/// [`nll`] over a compressed model, consuming factored weights directly —
+/// the serving path for `RefBackend`'s factored mode, `eval::ppl_reference`,
+/// and the factored-vs-dense equivalence suite.
+pub fn nll_model(m: &CompressedModel, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
+    nll_impl(Params::Model(m), tokens, batch, seq)
+}
+
+fn nll_impl(p: Params<'_>, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
+    let cfg = p.weights().config;
     let t = seq - 1;
-    let hidden = forward_hidden(w, tokens, batch, seq, t);
-    // logits + per-position cross entropy
-    let lm = w.by_name("lm_head");
+    let rows = batch * t;
+    let hidden = forward_hidden_obs(p, tokens, batch, seq, t, None);
+    // batched logits: one rows×d×V GEMM (lm_head is never compressed)
+    let lm = p.weights().by_name("lm_head");
     let (d, v) = (cfg.d, cfg.vocab);
-    let mut out = vec![0.0f32; batch * t];
-    let mut logits = vec![0.0f32; v];
-    for b in 0..batch {
-        for pos in 0..t {
-            let h = &hidden[(b * t + pos) * d..(b * t + pos + 1) * d];
-            for x in logits.iter_mut() {
-                *x = 0.0;
-            }
-            for (i, &hv) in h.iter().enumerate() {
-                if hv == 0.0 {
-                    continue;
-                }
-                let row = &lm.data[i * v..(i + 1) * v];
-                for j in 0..v {
-                    logits[j] += hv * row[j];
-                }
-            }
-            let max = logits.iter().cloned().fold(f32::MIN, f32::max);
-            let logz = max + logits.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+    let logits = Linear::Dense { w: &lm.data, d1: d, d2: v }.matmul(&hidden, rows);
+    // per-position cross entropy, row-parallel
+    let mut out = vec![0.0f32; rows];
+    parallel_row_bands(&mut out, rows, 1, |row0, band| {
+        for (i, o) in band.iter_mut().enumerate() {
+            let r = row0 + i;
+            let row = &logits[r * v..(r + 1) * v];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let logz = max + row.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+            let (b, pos) = (r / t, r % t);
             let target = tokens[b * seq + pos + 1] as usize;
-            out[b * t + pos] = logz - logits[target];
+            *o = logz - row[target];
         }
-    }
+    });
     out
 }
 
@@ -140,22 +210,22 @@ pub fn forward_hidden(
     seq: usize,
     t: usize,
 ) -> Vec<f32> {
-    forward_hidden_obs(w, tokens, batch, seq, t, None)
+    forward_hidden_obs(Params::Dense(w), tokens, batch, seq, t, None)
 }
 
 /// Forward with an optional calibration observer hooked on the inputs of
 /// every compressible projection.
 fn forward_hidden_obs(
-    w: &Weights,
+    p: Params<'_>,
     tokens: &[i32],
     batch: usize,
     seq: usize,
     t: usize,
     mut sums: Option<&mut CalibSums>,
 ) -> Vec<f32> {
-    let cfg = w.config;
+    let cfg = p.weights().config;
     let d = cfg.d;
-    let embed = w.by_name("embed");
+    let embed = p.weights().by_name("embed");
     let mut x = vec![0.0f32; batch * t * d];
     for b in 0..batch {
         for pos in 0..t {
@@ -166,14 +236,16 @@ fn forward_hidden_obs(
     }
     let (cos, sin) = rope_tables(t, cfg.head_dim());
     for l in 0..cfg.layers {
-        attention_block(w, &mut x, batch, t, l, &cos, &sin, sums.as_deref_mut());
-        mlp_block(w, &mut x, batch, t, l, sums.as_deref_mut());
+        attention_block(p, &mut x, batch, t, l, &cos, &sin, sums.as_deref_mut());
+        mlp_block(p, &mut x, batch, t, l, sums.as_deref_mut());
     }
-    // final rmsnorm
-    let fnorm = &w.by_name("final_norm").data;
-    for row in x.chunks_exact_mut(d) {
-        rmsnorm_inplace(row, fnorm);
-    }
+    // final rmsnorm, row-parallel
+    let fnorm = &p.weights().by_name("final_norm").data;
+    parallel_row_bands(&mut x, batch * t, d, |_, band| {
+        for row in band.chunks_exact_mut(d) {
+            rmsnorm_inplace(row, fnorm);
+        }
+    });
     x
 }
 
@@ -191,6 +263,28 @@ fn rmsnorm_inplace(x: &mut [f32], w: &[f32]) {
     for i in 0..x.len() {
         x[i] *= inv * w[i];
     }
+}
+
+/// Normalize every row of `x` into a fresh buffer, row-parallel.
+fn rmsnorm_rows(x: &[f32], w: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    parallel_row_bands(&mut out, rows, d, |row0, band| {
+        for (i, orow) in band.chunks_exact_mut(d).enumerate() {
+            let r = row0 + i;
+            rmsnorm(&x[r * d..(r + 1) * d], w, orow);
+        }
+    });
+    out
+}
+
+/// y += o, elementwise over the residual stream, row-parallel.
+fn residual_add(x: &mut [f32], o: &[f32], rows: usize, d: usize) {
+    parallel_row_bands(x, rows, d, |row0, band| {
+        let base = row0 * d;
+        for (i, xv) in band.iter_mut().enumerate() {
+            *xv += o[base + i];
+        }
+    });
 }
 
 fn rope_tables(t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
@@ -221,22 +315,9 @@ fn apply_rope(v: &mut [f32], p: usize, cos: &[f32], sin: &[f32]) {
     }
 }
 
-/// y[j] += x · W[:, j] for row-major W (d_in × d_out).
-fn matvec_add(x: &[f32], w: &[f32], d_out: usize, y: &mut [f32]) {
-    for (i, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let row = &w[i * d_out..(i + 1) * d_out];
-        for j in 0..d_out {
-            y[j] += xv * row[j];
-        }
-    }
-}
-
 #[allow(clippy::too_many_arguments)]
 fn attention_block(
-    w: &Weights,
+    p: Params<'_>,
     x: &mut [f32],
     batch: usize,
     t: usize,
@@ -245,54 +326,55 @@ fn attention_block(
     sin: &[f32],
     mut sums: Option<&mut CalibSums>,
 ) {
+    let w = p.weights();
     let cfg = w.config;
     let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
     let kvd = cfg.kvd();
     let an = &w.by_name("attn_norm").data[l * d..(l + 1) * d];
-    let wq = &w.by_name("wq").data[l * d * d..(l + 1) * d * d];
-    let wk = &w.by_name("wk").data[l * d * kvd..(l + 1) * d * kvd];
-    let wv = &w.by_name("wv").data[l * d * kvd..(l + 1) * d * kvd];
-    let wo = &w.by_name("wo").data[l * d * d..(l + 1) * d * d];
     let rep = h / kvh;
     let scale = 1.0 / (hd as f32).sqrt();
+    let rows = batch * t;
 
-    let mut xn = vec![0.0f32; d];
-    for b in 0..batch {
-        // project the whole sequence first
-        let mut q = vec![0.0f32; t * d];
-        let mut k = vec![0.0f32; t * kvd];
-        let mut v = vec![0.0f32; t * kvd];
-        for pos in 0..t {
-            let row = &x[(b * t + pos) * d..(b * t + pos + 1) * d];
-            rmsnorm(row, an, &mut xn);
-            if let Some(s) = sums.as_deref_mut() {
-                s.record(SLOT_ATTN, l, &xn);
-            }
-            matvec_add(&xn, wq, d, &mut q[pos * d..(pos + 1) * d]);
-            matvec_add(&xn, wk, kvd, &mut k[pos * kvd..(pos + 1) * kvd]);
-            matvec_add(&xn, wv, kvd, &mut v[pos * kvd..(pos + 1) * kvd]);
+    // pre-projection norm over every row, then one GEMM per projection
+    let xn = rmsnorm_rows(x, an, rows, d);
+    if let Some(s) = sums.as_deref_mut() {
+        s.record_rows(SLOT_ATTN, l, &xn, d);
+    }
+    let mut q = p.linear("wq", l).matmul(&xn, rows);
+    let mut k = p.linear("wk", l).matmul(&xn, rows);
+    let v = p.linear("wv", l).matmul(&xn, rows);
+    // rope, row-parallel (a row's position is r % t)
+    parallel_row_bands(&mut q, rows, d, |row0, band| {
+        for (i, row) in band.chunks_exact_mut(d).enumerate() {
+            let pos = (row0 + i) % t;
             for head in 0..h {
-                apply_rope(&mut q[pos * d + head * hd..pos * d + (head + 1) * hd], pos, cos, sin);
-            }
-            for head in 0..kvh {
-                apply_rope(
-                    &mut k[pos * kvd + head * hd..pos * kvd + (head + 1) * hd],
-                    pos,
-                    cos,
-                    sin,
-                );
+                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, cos, sin);
             }
         }
-        // causal attention, head by head
-        let mut attn = vec![0.0f32; t * d];
+    });
+    parallel_row_bands(&mut k, rows, kvd, |row0, band| {
+        for (i, row) in band.chunks_exact_mut(kvd).enumerate() {
+            let pos = (row0 + i) % t;
+            for head in 0..kvh {
+                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, cos, sin);
+            }
+        }
+    });
+    // causal attention: each output row depends only on q/k/v, so rows
+    // split freely across threads with unchanged per-row FP order
+    let mut attn = vec![0.0f32; rows * d];
+    parallel_row_bands(&mut attn, rows, d, |row0, band| {
         let mut scores = vec![0.0f32; t];
-        for head in 0..h {
-            let kv_head = head / rep;
-            for pos in 0..t {
-                let qv = &q[pos * d + head * hd..pos * d + (head + 1) * hd];
+        for (i, orow) in band.chunks_exact_mut(d).enumerate() {
+            let r = row0 + i;
+            let (b, pos) = (r / t, r % t);
+            for head in 0..h {
+                let kv_head = head / rep;
+                let qv = &q[r * d + head * hd..r * d + (head + 1) * hd];
                 let mut max = f32::MIN;
                 for j in 0..=pos {
-                    let kv = &k[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                    let krow = (b * t + j) * kvd + kv_head * hd;
+                    let kv = &k[krow..krow + hd];
                     let s: f32 = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
                     scores[j] = s;
                     max = max.max(s);
@@ -302,77 +384,65 @@ fn attention_block(
                     *s = (*s - max).exp();
                     denom += *s;
                 }
-                let out = &mut attn[pos * d + head * hd..pos * d + (head + 1) * hd];
+                let out = &mut orow[head * hd..(head + 1) * hd];
                 for j in 0..=pos {
-                    let p = scores[j] / denom;
-                    let vv = &v[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                    let pj = scores[j] / denom;
+                    let vrow = (b * t + j) * kvd + kv_head * hd;
+                    let vv = &v[vrow..vrow + hd];
                     for i in 0..hd {
-                        out[i] += p * vv[i];
+                        out[i] += pj * vv[i];
                     }
                 }
             }
         }
-        // output projection + residual
-        for pos in 0..t {
-            let row = &mut x[(b * t + pos) * d..(b * t + pos + 1) * d];
-            if let Some(s) = sums.as_deref_mut() {
-                s.record(SLOT_O, l, &attn[pos * d..(pos + 1) * d]);
-            }
-            let mut o = vec![0.0f32; d];
-            matvec_add(&attn[pos * d..(pos + 1) * d], wo, d, &mut o);
-            for i in 0..d {
-                row[i] += o[i];
-            }
-        }
+    });
+    // output projection + residual
+    if let Some(s) = sums.as_deref_mut() {
+        s.record_rows(SLOT_O, l, &attn, d);
     }
+    let o = p.linear("wo", l).matmul(&attn, rows);
+    residual_add(x, &o, rows, d);
 }
 
 fn mlp_block(
-    w: &Weights,
+    p: Params<'_>,
     x: &mut [f32],
     batch: usize,
     t: usize,
     l: usize,
     mut sums: Option<&mut CalibSums>,
 ) {
+    let w = p.weights();
     let cfg = w.config;
     let (d, dff) = (cfg.d, cfg.dff);
     let mn = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
-    let wg = &w.by_name("w_gate").data[l * d * dff..(l + 1) * d * dff];
-    let wu = &w.by_name("w_up").data[l * d * dff..(l + 1) * d * dff];
-    let wd = &w.by_name("w_down").data[l * dff * d..(l + 1) * dff * d];
-    let mut xn = vec![0.0f32; d];
-    let mut g = vec![0.0f32; dff];
-    let mut u = vec![0.0f32; dff];
-    for bt in 0..batch * t {
-        let row = &mut x[bt * d..(bt + 1) * d];
-        rmsnorm(row, mn, &mut xn);
-        if let Some(s) = sums.as_deref_mut() {
-            s.record(SLOT_MLP, l, &xn);
-        }
-        g.iter_mut().for_each(|x| *x = 0.0);
-        u.iter_mut().for_each(|x| *x = 0.0);
-        matvec_add(&xn, wg, dff, &mut g);
-        matvec_add(&xn, wu, dff, &mut u);
-        for i in 0..dff {
-            // silu(g) * u
-            let s = g[i] / (1.0 + (-g[i]).exp());
-            g[i] = s * u[i];
-        }
-        if let Some(s) = sums.as_deref_mut() {
-            s.record(SLOT_DOWN, l, &g);
-        }
-        let mut o = vec![0.0f32; d];
-        matvec_add(&g, wd, d, &mut o);
-        for i in 0..d {
-            row[i] += o[i];
-        }
+    let rows = batch * t;
+
+    let xn = rmsnorm_rows(x, mn, rows, d);
+    if let Some(s) = sums.as_deref_mut() {
+        s.record_rows(SLOT_MLP, l, &xn, d);
     }
+    let mut g = p.linear("w_gate", l).matmul(&xn, rows);
+    let u = p.linear("w_up", l).matmul(&xn, rows);
+    // silu(g) * u, elementwise row-parallel
+    parallel_row_bands(&mut g, rows, dff, |row0, band| {
+        let base = row0 * dff;
+        for (i, gv) in band.iter_mut().enumerate() {
+            let s = *gv / (1.0 + (-*gv).exp());
+            *gv = s * u[base + i];
+        }
+    });
+    if let Some(s) = sums.as_deref_mut() {
+        s.record_rows(SLOT_DOWN, l, &g, dff);
+    }
+    let o = p.linear("w_down", l).matmul(&g, rows);
+    residual_add(x, &o, rows, d);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::lowrank::CompressedModel;
     use crate::model::{ModelConfig, Weights};
     use crate::util::rng::Rng;
 
@@ -443,5 +513,25 @@ mod tests {
         let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
         let out = nll(&w, &toks, b, s);
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn model_passthrough_is_bit_identical_to_dense() {
+        // dense_passthrough resolves every site to the same weight slabs,
+        // so the model forward must match the dense forward exactly
+        let (w, toks, b, s) = setup();
+        let m = CompressedModel::dense_passthrough(w.clone());
+        assert_eq!(nll(&w, &toks, b, s), nll_model(&m, &toks, b, s));
+        let mut sd = CalibSums::new(&w.config);
+        let mut sm = CalibSums::new(&w.config);
+        accumulate_calib(&w, &toks, b, s, &mut sd);
+        accumulate_calib_model(&m, &toks, b, s, &mut sm);
+        assert_eq!(sd.tokens, sm.tokens);
+        for slot in 0..4 {
+            for l in 0..w.config.layers {
+                assert_eq!(sd.grams[slot][l].data, sm.grams[slot][l].data);
+                assert_eq!(sd.absmean[slot][l], sm.absmean[slot][l]);
+            }
+        }
     }
 }

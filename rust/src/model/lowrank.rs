@@ -4,7 +4,13 @@
 //! per-layer coefficients C⁽ⁱ⁾ (k_g×d2) — the Basis-Sharing layout the
 //! paper builds on (n=1 groups degenerate to plain SVD-LLM factors).
 //!
-//! Two execution paths consume this:
+//! Three execution paths consume this:
+//!  - [`CompressedModel::linear`] resolves each (type, layer) projection
+//!    site to a [`Linear`] operator — `Dense` (the base weight slab) or
+//!    `Factored` (B, C) — which the pure-Rust forward (`model::fwd`), the
+//!    reference calibrator, evaluator, and `RefBackend` all execute
+//!    directly: a factored site runs as two skinny GEMMs `(x·B)·C` and the
+//!    removed parameters are never rematerialized;
 //!  - `to_dense()` reconstructs W ≈ B·C per layer and reuses the AOT dense
 //!    artifact (bit-accurate PPL/zero-shot evaluation, no recompilation);
 //!  - `graph::build_compressed` emits the *factored* matmuls with the exact
@@ -13,8 +19,55 @@
 use std::collections::BTreeMap;
 
 use super::{ModelConfig, Weights, COMPRESSIBLE};
-use crate::tensor::{matmul::matmul_f32, Mat32};
+use crate::tensor::{
+    matmul::{gemm_f32, matmul_f32},
+    Mat32,
+};
 use crate::util::profile::{self, Stage};
+
+/// One projection site y = x·W, resolved to its cheapest executable form.
+///
+/// Every consumer of model weights on the pure-Rust path goes through this
+/// enum: `Dense` borrows the layer's slab of the base weight tensor,
+/// `Factored` borrows the group basis and the layer's coefficient block.
+/// [`Linear::matmul`] is the single place serving FLOPs are spent (and
+/// profiled: `Stage::Fwd` vs `Stage::FwdLowrank`).
+#[derive(Clone, Copy, Debug)]
+pub enum Linear<'a> {
+    /// dense d1×d2 weight slab (row-major)
+    Dense { w: &'a [f32], d1: usize, d2: usize },
+    /// factored W ≈ B·C: B is d1×k, C is k×d2
+    Factored { b: &'a Mat32, c: &'a Mat32 },
+}
+
+impl Linear<'_> {
+    /// (input dim, output dim) of the projection.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Linear::Dense { d1, d2, .. } => (*d1, *d2),
+            Linear::Factored { b, c } => (b.rows, c.cols),
+        }
+    }
+
+    /// y = x·W for `rows` row-major activation rows.
+    ///
+    /// Dense runs one m×d1×d2 GEMM; factored runs two skinny GEMMs
+    /// `(x·B)·C` — cheaper whenever rank k is below the break-even
+    /// `d1·d2/(d1+d2)` (`ModelConfig::kmax`), which the rank allocator
+    /// guarantees. Both paths inherit `gemm_f32`'s bit-determinism for any
+    /// thread count.
+    pub fn matmul(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        match self {
+            Linear::Dense { w, d1, d2 } => {
+                profile::time(Stage::Fwd, || gemm_f32(x, rows, *d1, w, *d2))
+            }
+            Linear::Factored { b, c } => profile::time(Stage::FwdLowrank, || {
+                let mid = gemm_f32(x, rows, b.rows, &b.data, b.cols);
+                gemm_f32(&mid, rows, c.rows, &c.data, c.cols)
+            }),
+        }
+    }
+}
 
 /// Shared-basis factors for one group of consecutive layers.
 #[derive(Clone, Debug)]
@@ -71,18 +124,37 @@ impl CompressedModel {
     }
 
     /// Factors of (type, layer) if that type is factored.
+    ///
+    /// Groups are built in ascending `start_layer` order (the planner walks
+    /// `layer_groups` front to back), so the containing group — if any — is
+    /// the last one starting at or before `layer`: a binary search, not a
+    /// scan.
     pub fn layer_factors(&self, typ: &str, layer: usize) -> Option<(&Mat32, &Mat32)> {
         match self.reps.get(typ)? {
             TypeRep::Dense => None,
             TypeRep::Factored(groups) => {
-                for g in groups {
-                    if layer >= g.start_layer && layer < g.start_layer + g.n_layers() {
-                        return Some((&g.b, &g.cs[layer - g.start_layer]));
-                    }
+                let i = groups.partition_point(|g| g.start_layer <= layer);
+                if i == 0 {
+                    return None;
                 }
-                None
+                let g = &groups[i - 1];
+                (layer < g.start_layer + g.n_layers())
+                    .then(|| (&g.b, &g.cs[layer - g.start_layer]))
             }
         }
+    }
+
+    /// Resolve the [`Linear`] operator serving (type, layer): the factored
+    /// form when this site was compressed, else the dense slab of the base
+    /// weight tensor. This is the single seam every pure-Rust projection
+    /// call goes through — forward, calibration, eval, and `RefBackend`.
+    pub fn linear(&self, typ: &str, layer: usize) -> Linear<'_> {
+        if let Some((b, c)) = self.layer_factors(typ, layer) {
+            return Linear::Factored { b, c };
+        }
+        let (d1, d2) = self.config().matrix_dims(typ);
+        let t = &self.base.tensors[ModelConfig::param_index(typ)];
+        Linear::Dense { w: &t.data[layer * d1 * d2..(layer + 1) * d1 * d2], d1, d2 }
     }
 
     /// Parameter count across the compressible weight types.
@@ -121,7 +193,6 @@ impl CompressedModel {
     /// Reconstruct per-layer dense weights W ≈ B·C (for the AOT eval path).
     pub fn to_dense(&self) -> Weights {
         let mut w = self.base.clone();
-        let cfg = self.config();
         for typ in COMPRESSIBLE {
             if let TypeRep::Factored(groups) = &self.reps[typ] {
                 let pidx = ModelConfig::param_index(typ);
@@ -131,7 +202,6 @@ impl CompressedModel {
                         w.tensors[pidx].set_layer_mat(g.start_layer + i, &rec);
                     }
                 }
-                let _ = cfg;
             }
         }
         w
@@ -235,5 +305,68 @@ mod tests {
         assert_eq!(m.layer_factors("wv", 0).unwrap().0.cols, 3);
         assert_eq!(m.layer_factors("wv", 1).unwrap().0.cols, 5);
         assert!(m.layer_factors("wq", 0).is_none());
+    }
+
+    #[test]
+    fn layer_factors_handles_gaps_and_uncovered_edges() {
+        // groups covering layers {1} and {3} of a 4-layer stack: the binary
+        // search must miss layers 0 (before any group), 2 (gap), and 4+
+        let cfg = ModelConfig::by_name("s").unwrap();
+        let mut m = CompressedModel::dense_passthrough(Weights::init(cfg, 2));
+        let (d1, d2) = cfg.matrix_dims("wo");
+        let group = |start: usize, k: usize| GroupFactors {
+            start_layer: start,
+            b: Mat32::zeros(d1, k),
+            cs: vec![Mat32::zeros(k, d2)],
+        };
+        m.reps.insert("wo".into(), TypeRep::Factored(vec![group(1, 3), group(3, 5)]));
+        assert!(m.layer_factors("wo", 0).is_none());
+        assert_eq!(m.layer_factors("wo", 1).unwrap().0.cols, 3);
+        assert!(m.layer_factors("wo", 2).is_none());
+        assert_eq!(m.layer_factors("wo", 3).unwrap().0.cols, 5);
+        assert!(m.layer_factors("wo", 4).is_none());
+    }
+
+    #[test]
+    fn linear_resolves_dense_slab_and_factored_sites() {
+        let mut m = tiny_model();
+        let cfg = m.config();
+        let (d1, d2) = cfg.matrix_dims("wq");
+        // dense site: slab must alias the base tensor's layer-1 window
+        match m.linear("wq", 1) {
+            Linear::Dense { w, d1: a, d2: b } => {
+                assert_eq!((a, b), (d1, d2));
+                assert_eq!(w, &m.base.by_name("wq").data[d1 * d2..2 * d1 * d2]);
+            }
+            Linear::Factored { .. } => panic!("passthrough resolved factored"),
+        }
+        let k = 4usize;
+        let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| (i % 9) as f32 * 0.01).collect());
+        let cs: Vec<Mat32> = (0..cfg.layers)
+            .map(|l| Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i + l) % 6) as f32 * 0.01).collect()))
+            .collect();
+        m.reps.insert(
+            "wq".into(),
+            TypeRep::Factored(vec![GroupFactors { start_layer: 0, b, cs }]),
+        );
+        assert!(matches!(m.linear("wq", 0), Linear::Factored { .. }));
+        assert_eq!(m.linear("wq", 0).dims(), (d1, d2));
+    }
+
+    #[test]
+    fn linear_matmul_factored_matches_dense_reconstruction() {
+        // (x·B)·C vs x·(B·C): same product up to f32 rounding of the
+        // intermediate — the exact equivalence the serving path relies on
+        let (d1, k, d2, rows) = (24usize, 5usize, 16usize, 7usize);
+        let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect());
+        let c = Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i % 7) as f32 - 3.0) * 0.03).collect());
+        let x: Vec<f32> = (0..rows * d1).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+        let factored = Linear::Factored { b: &b, c: &c }.matmul(&x, rows);
+        let w = matmul_f32(&b, &c);
+        let dense = Linear::Dense { w: &w.data, d1, d2 }.matmul(&x, rows);
+        assert_eq!(factored.len(), rows * d2);
+        for (f, d) in factored.iter().zip(&dense) {
+            assert!((f - d).abs() < 1e-4, "{f} vs {d}");
+        }
     }
 }

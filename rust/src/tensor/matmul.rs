@@ -1,9 +1,10 @@
 //! Blocked matrix multiplication.
 //!
-//! The pipeline's own GEMM (used by whitening / SVD reconstruction — the
-//! model hot path runs in XLA). i-k-j loop order with 64x64x64 blocking:
-//! the inner j-loop is a contiguous FMA over both B and C rows, which the
-//! compiler auto-vectorizes. Rows of C are computed in parallel bands
+//! The pipeline's own GEMM, used by whitening / SVD reconstruction AND the
+//! pure-Rust serving forward (`model::fwd` batches every projection through
+//! [`gemm_f32`]). i-k-j loop order with 64x64x64 blocking: the inner j-loop
+//! is a contiguous FMA over both B and C rows, which the compiler
+//! auto-vectorizes. Rows of C are computed in parallel bands
 //! (`util::parallel::parallel_row_bands`); each output row's accumulation
 //! order is fixed by the k/j blocking alone, so results are bit-identical
 //! for any thread count. See EXPERIMENTS.md §Perf for measurements.
@@ -51,8 +52,7 @@ pub fn matmul_f64(a: &MatF, b: &MatF) -> MatF {
     c
 }
 
-fn f32_band(a: &Mat32, b: &Mat32, row0: usize, cband: &mut [f32]) {
-    let (k, n) = (a.cols, b.cols);
+fn f32_band(a: &[f32], k: usize, b: &[f32], n: usize, row0: usize, cband: &mut [f32]) {
     let brows = cband.len() / n;
     for i0 in (0..brows).step_by(BLOCK) {
         let i1 = (i0 + BLOCK).min(brows);
@@ -60,11 +60,11 @@ fn f32_band(a: &Mat32, b: &Mat32, row0: usize, cband: &mut [f32]) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
                 let gi = row0 + i;
-                let arow = &a.data[gi * k..(gi + 1) * k];
+                let arow = &a[gi * k..(gi + 1) * k];
                 let crow = &mut cband[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let av = arow[kk];
-                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    let brow = &b[kk * n..(kk + 1) * n];
                     for j in 0..n {
                         crow[j] += av * brow[j];
                     }
@@ -74,13 +74,25 @@ fn f32_band(a: &Mat32, b: &Mat32, row0: usize, cband: &mut [f32]) {
     }
 }
 
+/// C = A * B over flat row-major slices: `a` is m×k, `b` is k×n, returns
+/// the m×n product. This is the serving-forward workhorse — `model::fwd`
+/// calls it with activation rows as A and a weight (or factor) slab as B,
+/// avoiding any `Mat32` wrapping of model tensors. Same blocked kernel and
+/// row-band parallelism as [`matmul_f32`], so output is bit-identical for
+/// any thread count.
+pub fn gemm_f32(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "gemm lhs shape mismatch");
+    assert_eq!(b.len(), k * n, "gemm rhs shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    parallel_row_bands(&mut c, m, n, |row0, band| f32_band(a, k, b, n, row0, band));
+    c
+}
+
 /// C = A * B, f32 (weight reconstruction W = B·C on the compression path).
 pub fn matmul_f32(a: &Mat32, b: &Mat32) -> Mat32 {
     assert_eq!(a.cols, b.rows, "matmul dim mismatch");
     let (m, n) = (a.rows, b.cols);
-    let mut c = Mat32::zeros(m, n);
-    parallel_row_bands(&mut c.data, m, n, |row0, band| f32_band(a, b, row0, band));
-    c
+    Mat32::from_vec(m, n, gemm_f32(&a.data, m, a.cols, &b.data, n))
 }
 
 /// y = x * A for a single row-vector x (serving-side helper).
@@ -168,6 +180,22 @@ mod tests {
             assert_eq!(a.t_matmul(&c).data, base_t.data, "t_matmul @ {t} threads");
         }
         set_threads(0);
+    }
+
+    #[test]
+    fn gemm_slices_match_matmul_exactly() {
+        let mut rng = Rng::new(5);
+        let a = random(&mut rng, 37, 70).to_f32();
+        let b = random(&mut rng, 70, 23).to_f32();
+        let want = matmul_f32(&a, &b);
+        let got = gemm_f32(&a.data, 37, 70, &b.data, 23);
+        assert_eq!(got, want.data);
+        set_threads(1);
+        let t1 = gemm_f32(&a.data, 37, 70, &b.data, 23);
+        set_threads(4);
+        let t4 = gemm_f32(&a.data, 37, 70, &b.data, 23);
+        set_threads(0);
+        assert_eq!(t1, t4, "gemm_f32 not thread-invariant");
     }
 
     #[test]

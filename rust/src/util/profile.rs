@@ -1,13 +1,17 @@
-//! Per-stage timing for the compression engine.
+//! Per-stage timing for the compression engine and the serving forward.
 //!
-//! Seven stages cover the hot path end to end: calibration forward passes,
+//! Nine stages cover the hot path end to end: calibration forward passes,
 //! Gram formation (calib Gram accumulation + the A·Aᵀ / AᵀA products inside
 //! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve — split
 //! into its sweep loop (`eigen_sweep`, the blocked-parallel part) and the
 //! final sort/permute (`eigen_sort`, sequential and cheap) so the profile
 //! shows exactly which part of the old `eigen` stage parallelized —
-//! truncation (factor extraction, including the unwhitening solve), and
-//! dense reconstruction. Counters are process-global atomics so they can be
+//! truncation (factor extraction, including the unwhitening solve), dense
+//! reconstruction, and the two serving-forward GEMM stages: `fwd` (dense
+//! y = x·W projections) and `fwd_lowrank` (factored y = (x·B)·C
+//! projections). The split lets the coordinator tests assert that factored
+//! serving never reconstructs (`reconstruct` calls stay flat while
+//! `fwd_lowrank` climbs). Counters are process-global atomics so they can be
 //! bumped from worker threads without plumbing a handle through every call;
 //! `cpu_ms` therefore sums time across threads (it can exceed wall time —
 //! that's the point: wall/cpu shows how well a stage parallelizes).
@@ -32,19 +36,23 @@ pub enum Stage {
     EigenSort = 4,
     Truncate = 5,
     Reconstruct = 6,
+    Fwd = 7,
+    FwdLowrank = 8,
 }
 
-pub const STAGE_NAMES: [&str; 7] =
-    ["calib", "gram", "whiten", "eigen_sweep", "eigen_sort", "truncate", "reconstruct"];
+pub const STAGE_NAMES: [&str; 9] = [
+    "calib", "gram", "whiten", "eigen_sweep", "eigen_sort", "truncate", "reconstruct",
+    "fwd", "fwd_lowrank",
+];
 
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
-static NANOS: [AtomicU64; 7] = [ZERO; 7];
-static CALLS: [AtomicU64; 7] = [ZERO; 7];
+static NANOS: [AtomicU64; 9] = [ZERO; 9];
+static CALLS: [AtomicU64; 9] = [ZERO; 9];
 
 /// Zero all stage counters (call before a profiled run).
 pub fn reset() {
-    for i in 0..7 {
+    for i in 0..9 {
         NANOS[i].store(0, Ordering::Relaxed);
         CALLS[i].store(0, Ordering::Relaxed);
     }
@@ -53,6 +61,13 @@ pub fn reset() {
 fn record(stage: Stage, nanos: u64) {
     NANOS[stage as usize].fetch_add(nanos, Ordering::Relaxed);
     CALLS[stage as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current call count of a stage. Tests read deltas of this around a
+/// region to assert which code path ran (e.g. "factored serving never
+/// entered `Reconstruct`").
+pub fn stage_calls(stage: Stage) -> u64 {
+    CALLS[stage as usize].load(Ordering::Relaxed)
 }
 
 /// Time a closure under `stage`.
@@ -99,7 +114,7 @@ pub struct CompressProfile {
 /// Read the counters into a [`CompressProfile`]. `wall_ms` is the caller's
 /// end-to-end wall time for the profiled region.
 pub fn snapshot(wall_ms: f64) -> CompressProfile {
-    let stages = (0..7)
+    let stages = (0..9)
         .map(|i| StageTiming {
             name: STAGE_NAMES[i],
             cpu_ms: NANOS[i].load(Ordering::Relaxed) as f64 / 1e6,
@@ -116,6 +131,16 @@ impl CompressProfile {
         self.stages
             .iter()
             .filter(|s| s.name.starts_with("eigen"))
+            .map(|s| s.cpu_ms)
+            .sum()
+    }
+
+    /// Total serving-forward cpu-ms (dense `fwd` + `fwd_lowrank`) — gated
+    /// by `perf_hotpath` the same way as [`CompressProfile::eigen_ms`].
+    pub fn fwd_ms(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.name.starts_with("fwd"))
             .map(|s| s.cpu_ms)
             .sum()
     }
@@ -197,8 +222,27 @@ mod tests {
         assert!(j.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
         assert_eq!(j.get("wall_ms").and_then(|v| v.as_f64()), Some(2.5));
         let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
-        assert_eq!(stages.len(), 7);
+        assert_eq!(stages.len(), 9);
         assert_eq!(stages[0].get("name").and_then(|v| v.as_str()), Some("calib"));
+        assert_eq!(stages[7].get("name").and_then(|v| v.as_str()), Some("fwd"));
+        assert_eq!(stages[8].get("name").and_then(|v| v.as_str()), Some("fwd_lowrank"));
+    }
+
+    #[test]
+    fn fwd_ms_sums_both_forward_stages_and_stage_calls_counts() {
+        let _g = LOCK.lock().unwrap();
+        let before = snapshot(0.0);
+        let c0 = stage_calls(Stage::FwdLowrank);
+        time(Stage::Fwd, || std::hint::black_box(1 + 1));
+        time(Stage::FwdLowrank, || std::hint::black_box(2 + 2));
+        let after = snapshot(0.0);
+        assert!(after.fwd_ms() >= before.fwd_ms());
+        assert!(stage_calls(Stage::FwdLowrank) >= c0 + 1);
+        let calls = |p: &CompressProfile, name: &str| {
+            p.stages.iter().find(|s| s.name == name).unwrap().calls
+        };
+        assert!(calls(&after, "fwd") >= calls(&before, "fwd") + 1);
+        assert!(calls(&after, "fwd_lowrank") >= calls(&before, "fwd_lowrank") + 1);
     }
 
     #[test]

@@ -452,6 +452,64 @@ impl ScoreBackend for PoolProbeBackend {
 }
 
 #[test]
+fn factored_serving_never_reconstructs_dense_weights() {
+    // Acceptance: `drank serve --backend ref` on a compressed model must
+    // serve the factors directly — the Reconstruct stage stays flat while
+    // fwd_lowrank climbs. This assertion lives HERE (and not in the lib
+    // unit tests) because profile counters are process-global: this binary
+    // contains no other test that reconstructs dense weights, so the delta
+    // is race-free even under the default parallel test runner.
+    use drank::calib::CalibStats;
+    use drank::compress::{methods, CompressOpts, Method};
+    use drank::util::profile::{stage_calls, Stage};
+
+    let (cfg, w) = tiny();
+    let stats = CalibStats::synthetic(&cfg, 5);
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.3,
+        group_layers: 2,
+        ..Default::default()
+    };
+    let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+    assert!(model.achieved_ratio() > 0.0, "compression was a no-op; test is vacuous");
+
+    let recon0 = stage_calls(Stage::Reconstruct);
+    let lowrank0 = stage_calls(Stage::FwdLowrank);
+    let server = drank::coordinator::spawn_model_server(
+        model,
+        cfg.batch,
+        cfg.seq,
+        "ref",
+        ServerOpts { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let c = server.client();
+            let seq = cfg.seq;
+            std::thread::spawn(move || c.score(vec![1 + i as u32; seq]).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.nll.len(), cfg.seq - 1);
+        assert!(resp.nll.iter().all(|x| x.is_finite()));
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 6);
+    assert_eq!(
+        stage_calls(Stage::Reconstruct),
+        recon0,
+        "factored ref serving rematerialized dense weights"
+    );
+    assert!(
+        stage_calls(Stage::FwdLowrank) > lowrank0,
+        "factored ref serving never ran a low-rank projection"
+    );
+}
+
+#[test]
 fn server_opts_threads_sizes_the_shared_pool() {
     // `threads` rides the same process-global knob as `--threads` on the
     // compression side: ServerOpts::threads > 0 must be what the scoring

@@ -1,0 +1,406 @@
+//! Equivalence suite for the batched serving forward (`model::fwd`).
+//!
+//! Three contracts, all artifact-free:
+//!  (a) the batched row-band-parallel GEMM forward matches a scalar
+//!      per-token oracle (a frozen copy of the historical loop-level
+//!      forward) to 1e-5 NLL on the tiny model;
+//!  (b) factored serving (`fwd::nll_model`) matches `to_dense()` serving
+//!      to within factorization tolerance for all six methods — the
+//!      (x·B)·C vs x·(B·C) association gap, nothing more;
+//!  (c) the new forward is bit-identical (`to_bits`) across 1/2/4 threads,
+//!      dense and factored — registered in the determinism CI matrix like
+//!      `rust/tests/determinism.rs`.
+
+use std::sync::Mutex;
+
+use drank::calib::CalibStats;
+use drank::compress::{methods, CompressOpts, Method};
+use drank::model::lowrank::CompressedModel;
+use drank::model::{fwd, ModelConfig, Weights};
+use drank::util::parallel::set_threads;
+use drank::util::rng::Rng;
+
+/// `set_threads` is process-global; serialize tests that touch it.
+static THREAD_LOCK: Mutex<()> = Mutex::new(());
+
+fn tiny_setup(seed: u64) -> (ModelConfig, Weights, Vec<i32>) {
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, seed);
+    let mut r = Rng::new(seed.wrapping_add(100));
+    let toks: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|_| r.below(cfg.vocab) as i32).collect();
+    (cfg, w, toks)
+}
+
+fn all_methods() -> Vec<Method> {
+    vec![
+        Method::PlainSvd,
+        Method::Fwsvd,
+        Method::Asvd,
+        Method::SvdLlm,
+        Method::BasisSharing,
+        Method::DRank,
+    ]
+}
+
+// ---------------------------------------------------------- scalar oracle
+//
+// A frozen copy of the historical per-token scalar forward (pre-GEMM
+// `model/fwd.rs`), kept here as the numerical reference the batched
+// forward must reproduce. Deliberately self-contained: it shares no code
+// with the implementation under test.
+mod oracle {
+    use drank::model::Weights;
+
+    const EPS: f32 = 1e-5;
+    const ROPE_THETA: f32 = 1e4;
+
+    pub fn nll(w: &Weights, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32> {
+        let cfg = w.config;
+        let t = seq - 1;
+        let hidden = forward_hidden(w, tokens, batch, seq, t);
+        let lm = w.by_name("lm_head");
+        let (d, v) = (cfg.d, cfg.vocab);
+        let mut out = vec![0.0f32; batch * t];
+        let mut logits = vec![0.0f32; v];
+        for b in 0..batch {
+            for pos in 0..t {
+                let h = &hidden[(b * t + pos) * d..(b * t + pos + 1) * d];
+                for x in logits.iter_mut() {
+                    *x = 0.0;
+                }
+                for (i, &hv) in h.iter().enumerate() {
+                    if hv == 0.0 {
+                        continue;
+                    }
+                    let row = &lm.data[i * v..(i + 1) * v];
+                    for j in 0..v {
+                        logits[j] += hv * row[j];
+                    }
+                }
+                let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+                let logz = max + logits.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+                let target = tokens[b * seq + pos + 1] as usize;
+                out[b * t + pos] = logz - logits[target];
+            }
+        }
+        out
+    }
+
+    fn forward_hidden(w: &Weights, tokens: &[i32], batch: usize, seq: usize, t: usize) -> Vec<f32> {
+        let cfg = w.config;
+        let d = cfg.d;
+        let embed = w.by_name("embed");
+        let mut x = vec![0.0f32; batch * t * d];
+        for b in 0..batch {
+            for pos in 0..t {
+                let tok = tokens[b * seq + pos] as usize;
+                x[(b * t + pos) * d..(b * t + pos + 1) * d]
+                    .copy_from_slice(&embed.data[tok * d..(tok + 1) * d]);
+            }
+        }
+        let (cos, sin) = rope_tables(t, cfg.head_dim());
+        for l in 0..cfg.layers {
+            attention_block(w, &mut x, batch, t, l, &cos, &sin);
+            mlp_block(w, &mut x, batch, t, l);
+        }
+        let fnorm = &w.by_name("final_norm").data;
+        for row in x.chunks_exact_mut(d) {
+            rmsnorm_inplace(row, fnorm);
+        }
+        x
+    }
+
+    fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for i in 0..x.len() {
+            out[i] = x[i] * inv * w[i];
+        }
+    }
+
+    fn rmsnorm_inplace(x: &mut [f32], w: &[f32]) {
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for i in 0..x.len() {
+            x[i] *= inv * w[i];
+        }
+    }
+
+    fn rope_tables(t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
+        let half = hd / 2;
+        let mut cos = vec![0.0f32; t * half];
+        let mut sin = vec![0.0f32; t * half];
+        for p in 0..t {
+            for i in 0..half {
+                let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+                let ang = p as f32 * freq;
+                cos[p * half + i] = ang.cos();
+                sin[p * half + i] = ang.sin();
+            }
+        }
+        (cos, sin)
+    }
+
+    fn apply_rope(v: &mut [f32], p: usize, cos: &[f32], sin: &[f32]) {
+        let half = v.len() / 2;
+        for i in 0..half {
+            let c = cos[p * half + i];
+            let s = sin[p * half + i];
+            let x1 = v[i];
+            let x2 = v[half + i];
+            v[i] = x1 * c - x2 * s;
+            v[half + i] = x2 * c + x1 * s;
+        }
+    }
+
+    fn matvec_add(x: &[f32], w: &[f32], d_out: usize, y: &mut [f32]) {
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[i * d_out..(i + 1) * d_out];
+            for j in 0..d_out {
+                y[j] += xv * row[j];
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attention_block(
+        w: &Weights,
+        x: &mut [f32],
+        batch: usize,
+        t: usize,
+        l: usize,
+        cos: &[f32],
+        sin: &[f32],
+    ) {
+        let cfg = w.config;
+        let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
+        let kvd = cfg.kvd();
+        let an = &w.by_name("attn_norm").data[l * d..(l + 1) * d];
+        let wq = &w.by_name("wq").data[l * d * d..(l + 1) * d * d];
+        let wk = &w.by_name("wk").data[l * d * kvd..(l + 1) * d * kvd];
+        let wv = &w.by_name("wv").data[l * d * kvd..(l + 1) * d * kvd];
+        let wo = &w.by_name("wo").data[l * d * d..(l + 1) * d * d];
+        let rep = h / kvh;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut xn = vec![0.0f32; d];
+        for b in 0..batch {
+            let mut q = vec![0.0f32; t * d];
+            let mut k = vec![0.0f32; t * kvd];
+            let mut v = vec![0.0f32; t * kvd];
+            for pos in 0..t {
+                let row = &x[(b * t + pos) * d..(b * t + pos + 1) * d];
+                rmsnorm(row, an, &mut xn);
+                matvec_add(&xn, wq, d, &mut q[pos * d..(pos + 1) * d]);
+                matvec_add(&xn, wk, kvd, &mut k[pos * kvd..(pos + 1) * kvd]);
+                matvec_add(&xn, wv, kvd, &mut v[pos * kvd..(pos + 1) * kvd]);
+                for head in 0..h {
+                    apply_rope(&mut q[pos * d + head * hd..pos * d + (head + 1) * hd], pos, cos, sin);
+                }
+                for head in 0..kvh {
+                    apply_rope(
+                        &mut k[pos * kvd + head * hd..pos * kvd + (head + 1) * hd],
+                        pos,
+                        cos,
+                        sin,
+                    );
+                }
+            }
+            let mut attn = vec![0.0f32; t * d];
+            let mut scores = vec![0.0f32; t];
+            for head in 0..h {
+                let kv_head = head / rep;
+                for pos in 0..t {
+                    let qv = &q[pos * d + head * hd..pos * d + (head + 1) * hd];
+                    let mut max = f32::MIN;
+                    for j in 0..=pos {
+                        let kv = &k[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                        let s: f32 = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                        scores[j] = s;
+                        max = max.max(s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores[..=pos].iter_mut() {
+                        *s = (*s - max).exp();
+                        denom += *s;
+                    }
+                    let out = &mut attn[pos * d + head * hd..pos * d + (head + 1) * hd];
+                    for j in 0..=pos {
+                        let p = scores[j] / denom;
+                        let vv = &v[j * kvd + kv_head * hd..j * kvd + (kv_head + 1) * hd];
+                        for i in 0..hd {
+                            out[i] += p * vv[i];
+                        }
+                    }
+                }
+            }
+            for pos in 0..t {
+                let row = &mut x[(b * t + pos) * d..(b * t + pos + 1) * d];
+                let mut o = vec![0.0f32; d];
+                matvec_add(&attn[pos * d..(pos + 1) * d], wo, d, &mut o);
+                for i in 0..d {
+                    row[i] += o[i];
+                }
+            }
+        }
+    }
+
+    fn mlp_block(w: &Weights, x: &mut [f32], batch: usize, t: usize, l: usize) {
+        let cfg = w.config;
+        let (d, dff) = (cfg.d, cfg.dff);
+        let mn = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
+        let wg = &w.by_name("w_gate").data[l * d * dff..(l + 1) * d * dff];
+        let wu = &w.by_name("w_up").data[l * d * dff..(l + 1) * d * dff];
+        let wd = &w.by_name("w_down").data[l * dff * d..(l + 1) * dff * d];
+        let mut xn = vec![0.0f32; d];
+        let mut g = vec![0.0f32; dff];
+        let mut u = vec![0.0f32; dff];
+        for bt in 0..batch * t {
+            let row = &mut x[bt * d..(bt + 1) * d];
+            rmsnorm(row, mn, &mut xn);
+            g.iter_mut().for_each(|x| *x = 0.0);
+            u.iter_mut().for_each(|x| *x = 0.0);
+            matvec_add(&xn, wg, dff, &mut g);
+            matvec_add(&xn, wu, dff, &mut u);
+            for i in 0..dff {
+                let s = g[i] / (1.0 + (-g[i]).exp());
+                g[i] = s * u[i];
+            }
+            let mut o = vec![0.0f32; d];
+            matvec_add(&g, wd, d, &mut o);
+            for i in 0..d {
+                row[i] += o[i];
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- (a) GEMM
+
+#[test]
+fn batched_forward_matches_scalar_oracle() {
+    let (cfg, w, toks) = tiny_setup(3);
+    let got = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    let want = oracle::nll(&w, &toks, cfg.batch, cfg.seq);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, o)) in got.iter().zip(&want).enumerate() {
+        assert!((g - o).abs() < 1e-5, "position {i}: batched {g} vs scalar {o}");
+    }
+}
+
+#[test]
+fn batched_forward_matches_scalar_oracle_on_gqa() {
+    // grouped-query attention exercises the kv_head = head/rep indexing
+    let cfg = ModelConfig::by_name("gqa").unwrap();
+    let w = Weights::init(cfg, 21);
+    let mut r = Rng::new(22);
+    let (b, s) = (2usize, 24usize);
+    let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+    let got = fwd::nll(&w, &toks, b, s);
+    let want = oracle::nll(&w, &toks, b, s);
+    for (i, (g, o)) in got.iter().zip(&want).enumerate() {
+        assert!((g - o).abs() < 1e-5, "position {i}: batched {g} vs scalar {o}");
+    }
+}
+
+// ----------------------------------------------------------- (b) factored
+
+#[test]
+fn factored_serving_matches_dense_reconstruction_all_methods() {
+    let (cfg, w, toks) = tiny_setup(7);
+    let stats = CalibStats::synthetic(&cfg, 11);
+    for method in all_methods() {
+        let opts = CompressOpts {
+            method,
+            ratio: 0.3,
+            group_layers: 2,
+            ..Default::default()
+        };
+        let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+        assert!(
+            model.achieved_ratio() > 0.0,
+            "{method:?} produced no compression — test would be vacuous"
+        );
+        let factored = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq);
+        let dense = fwd::nll(&model.to_dense(), &toks, cfg.batch, cfg.seq);
+        assert_eq!(factored.len(), dense.len());
+        for (i, (f, d)) in factored.iter().zip(&dense).enumerate() {
+            // only the (x·B)·C vs x·(B·C) f32 association gap separates the
+            // two paths; 2e-2 absolute on ~ln(256) NLLs is generous
+            assert!((f - d).abs() < 2e-2, "{method:?} position {i}: {f} vs {d}");
+        }
+    }
+}
+
+// -------------------------------------------------------- (c) determinism
+
+#[test]
+fn forward_bit_identical_across_thread_counts() {
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let (cfg, w, toks) = tiny_setup(13);
+    let stats = CalibStats::synthetic(&cfg, 17);
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.3,
+        group_layers: 2,
+        ..Default::default()
+    };
+    let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+    let fingerprint = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    set_threads(1);
+    let dense1 = fingerprint(&fwd::nll(&w, &toks, cfg.batch, cfg.seq));
+    let fact1 = fingerprint(&fwd::nll_model(&model, &toks, cfg.batch, cfg.seq));
+    for t in [2usize, 4] {
+        set_threads(t);
+        let dense_t = fingerprint(&fwd::nll(&w, &toks, cfg.batch, cfg.seq));
+        let fact_t = fingerprint(&fwd::nll_model(&model, &toks, cfg.batch, cfg.seq));
+        assert_eq!(dense1, dense_t, "dense forward differs at {t} threads");
+        assert_eq!(fact1, fact_t, "factored forward differs at {t} threads");
+    }
+    set_threads(0);
+}
+
+#[test]
+fn calibration_observer_bit_identical_across_thread_counts() {
+    // the instrumented forward (batched projections + in-order row
+    // recording) must produce bit-identical calibration sums at any pool
+    // size — dense and factored
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let (cfg, w, toks) = tiny_setup(19);
+    let m = CompressedModel::dense_passthrough(w.clone());
+    let run = |threads: usize| {
+        set_threads(threads);
+        let mut sd = fwd::CalibSums::new(&cfg);
+        fwd::accumulate_calib(&w, &toks, cfg.batch, cfg.seq, &mut sd);
+        let mut sm = fwd::CalibSums::new(&cfg);
+        fwd::accumulate_calib_model(&m, &toks, cfg.batch, cfg.seq, &mut sm);
+        (sd, sm)
+    };
+    let (d1, m1) = run(1);
+    for t in [2usize, 4] {
+        let (dt, mt) = run(t);
+        for slot in 0..4 {
+            for l in 0..cfg.layers {
+                let bits = |g: &drank::tensor::MatF| {
+                    g.data.iter().map(|x| x.to_bits()).collect::<Vec<u64>>()
+                };
+                assert_eq!(
+                    bits(&d1.grams[slot][l]),
+                    bits(&dt.grams[slot][l]),
+                    "dense gram slot {slot} layer {l} differs at {t} threads"
+                );
+                assert_eq!(
+                    bits(&m1.grams[slot][l]),
+                    bits(&mt.grams[slot][l]),
+                    "model gram slot {slot} layer {l} differs at {t} threads"
+                );
+            }
+        }
+    }
+    set_threads(0);
+}

@@ -195,11 +195,16 @@ fn compensated_seam_accepts_custom_recalibration() {
         ..Default::default()
     };
     let mut calls = 0usize;
-    let (model, _) = pipeline::compensated_with(&w, stats0, &opts, |dense| {
+    let (model, _) = pipeline::compensated_with(&w, stats0, &opts, |m| {
         calls += 1;
-        // the prefix handed back must be a real partially-compressed model
-        assert_eq!(dense.config.name, cfg.name);
-        calib::run_reference(dense, &data, &copts)
+        // the prefix handed back must be a real partially-compressed model,
+        // with at least one type already factored (no dense handoff)
+        assert_eq!(m.config().name, cfg.name);
+        assert!(
+            m.reps.values().any(|r| matches!(r, drank::model::lowrank::TypeRep::Factored(_))),
+            "recalibration prefix should carry factored types"
+        );
+        calib::run_reference_model(m, &data, &copts)
     })
     .unwrap();
     // n=1 => one block per layer => layers-1 recalibrations
