@@ -17,10 +17,22 @@
 //! Everything is folded into `runs/reports/BENCH_perf_hotpath.json` (the
 //! bench trajectory artifact CI uploads; the per-stage profile is also
 //! written standalone as `runs/reports/compress_profile_tiny.json`) and
-//! gated against the checked-in baseline
-//! `rust/benches/baselines/BENCH_perf_hotpath.json`: any op — or the
-//! summed eigen_sweep+eigen_sort stage, or the summed fwd+fwd_lowrank
-//! stage — slower than 3x its baseline fails the bench.
+//! gated two ways:
+//!
+//!  - absolute backstop: any op — or the summed eigen_sweep+eigen_sort
+//!    stage, or the summed fwd+fwd_lowrank stage — slower than 3x its
+//!    entry in the checked-in baseline
+//!    `rust/benches/baselines/BENCH_perf_hotpath.json` fails the bench;
+//!  - relative gate: the serving rows (`fwd_*`, `attn_tiny`) additionally
+//!    compare their own 4-thread time against the 1-thread serial
+//!    reference measured moments earlier in the same process — t4 above
+//!    1.25x t1 fails. This replaces tight absolute ceilings (the
+//!    checked-in numbers were hardware-blind estimates) with a
+//!    machine-independent check, keeping the 3x absolute rule only as a
+//!    wholesale-slowdown backstop. The packed-GEMM row gates the other
+//!    direction: packed must beat the unpacked kernel by ≥1.3x on ≥2
+//!    threads, measured against the in-bench unpacked run.
+//!
 //! `DRANK_PERF_BASELINE` overrides the baseline path. `DRANK_FAST=1`
 //! lowers repetition counts only — sizes stay fixed so timings remain
 //! comparable against the baseline.
@@ -37,8 +49,9 @@ use drank::data::DataBundle;
 use drank::linalg::svd::svd;
 use drank::linalg::{cholesky_jitter, effective_rank};
 use drank::model::{ModelConfig, Weights};
+use drank::model::lowrank::Linear;
 use drank::report::Table;
-use drank::tensor::matmul::{matmul_f32, matmul_f64};
+use drank::tensor::matmul::{gemm_f32, gemm_f32_packed, matmul_f32, matmul_f64, PackedMat};
 use drank::tensor::{Mat32, MatF};
 use drank::util::json::Json;
 use drank::util::parallel::{set_threads, threads};
@@ -177,6 +190,83 @@ fn main() {
             format!("{:.2}x", t1 / t4.max(1e-9)),
         ]);
         ops.push(("t_matmul_512".into(), t1, t4));
+
+        // packed-panel GEMM on the same operands: byte-identical to the
+        // unpacked kernel at every thread count, and the block-major
+        // layout must actually pay for itself — ≥1.3x over unpacked on at
+        // least one of 2/4 threads, gated against the in-bench unpacked
+        // run rather than a hardware-blind absolute ceiling
+        let bits32 = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        let bp = PackedMat::pack(&b32.data, n, n);
+        set_threads(1);
+        let want_p = bits32(&gemm_f32(&a32.data, n, n, &b32.data, n));
+        assert_eq!(
+            bits32(&gemm_f32_packed(&a32.data, n, n, &bp)),
+            want_p,
+            "packed GEMM != unpacked bits at 1 thread"
+        );
+        set_threads(4);
+        assert_eq!(
+            bits32(&gemm_f32_packed(&a32.data, n, n, &bp)),
+            want_p,
+            "packed GEMM not thread-invariant"
+        );
+        let (t1, t4) = scale_pair(|| { let _ = gemm_f32_packed(&a32.data, n, n, &bp); }, reps);
+        t.row(vec![
+            "gemm_packed".into(),
+            format!("{n}x{n}x{n} @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("gemm_packed_512".into(), t1, t4));
+        let mut best_ratio = 0.0f64;
+        for th in [2usize, 4] {
+            set_threads(th);
+            let unpacked =
+                median_time(|| { let _ = gemm_f32(&a32.data, n, n, &b32.data, n); }, reps);
+            let packed = median_time(|| { let _ = gemm_f32_packed(&a32.data, n, n, &bp); }, reps);
+            best_ratio = best_ratio.max(unpacked / packed.max(1e-9));
+        }
+        t.row(vec![
+            "gemm_packed/unpacked".into(),
+            format!("{n}x{n}x{n} @2,4T"),
+            format!("{best_ratio:.2}x"),
+            "pack payoff (gate: >=1.3x)".into(),
+        ]);
+        assert!(
+            best_ratio >= 1.3,
+            "packed GEMM only {best_ratio:.2}x over unpacked at {n}x{n} (need >=1.3x on 2 or 4 threads)"
+        );
+
+        // fused factored path (x·B)·C through one scratch buffer vs the
+        // legacy two-allocation unpacked path — byte-identical, then timed
+        use std::sync::OnceLock;
+        let k = 64;
+        let rows = 192;
+        let bm = randf(&mut rng, n, k).to_f32();
+        let cm = randf(&mut rng, k, n).to_f32();
+        let x: Vec<f32> = randf(&mut rng, rows, n).to_f32().data;
+        let bslot: OnceLock<PackedMat> = OnceLock::new();
+        let cslot: OnceLock<PackedMat> = OnceLock::new();
+        let fused = Linear::Factored { b: &bm, c: &cm, pack: Some((&bslot, &cslot)) };
+        let plain = Linear::Factored { b: &bm, c: &cm, pack: None };
+        set_threads(1);
+        let want_f = bits32(&plain.matmul(&x, rows));
+        assert_eq!(bits32(&fused.matmul(&x, rows)), want_f, "fused factored != plain bits");
+        set_threads(4);
+        assert_eq!(
+            bits32(&fused.matmul(&x, rows)),
+            want_f,
+            "fused factored not thread-invariant"
+        );
+        let (t1, t4) = scale_pair(|| { let _ = fused.matmul(&x, rows); }, reps);
+        t.row(vec![
+            "fused_factored".into(),
+            format!("{rows}x{n}·({n}x{k}·{k}x{n}) @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("fused_factored_512".into(), t1, t4));
     }
     // grouped SVD sweep (the planning phase of a full compress) on the `m`
     // config with synthetic stats — no checkpoint or artifacts needed
@@ -274,6 +364,29 @@ fn main() {
             format!("{:.2}x", t1 / t4.max(1e-9)),
         ]);
         ops.push(("fwd_factored_tiny".into(), t1, t4));
+
+        // the attn stage in isolation: the blocked streaming-softmax
+        // kernel records wall time of the attention region once per layer
+        // call, so the per-forward cost falls out of profile-counter
+        // deltas without separating it from the surrounding GEMMs by hand
+        let attn_ms = |th: usize, n: usize| {
+            set_threads(th);
+            let _ = fwd::nll(&w, &toks, cfg.batch, cfg.seq); // warmup
+            let before = profile::snapshot(0.0).stage_ms("attn");
+            for _ in 0..n {
+                let _ = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+            }
+            (profile::snapshot(0.0).stage_ms("attn") - before) / n as f64
+        };
+        let areps = reps * 4; // cheap op; extra reps steady the mean
+        let (t1, t4) = (attn_ms(1, areps), attn_ms(4, areps));
+        t.row(vec![
+            "attn".into(),
+            format!("tiny {}x{} @1->4T", cfg.batch, cfg.seq),
+            format!("{t1:.3} -> {t4:.3}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("attn_tiny".into(), t1, t4));
     }
     set_threads(configured);
 
@@ -469,6 +582,20 @@ fn main() {
                         );
                         failed = true;
                     }
+                }
+            }
+            // serving rows: relative gate against this run's own serial
+            // reference — machine-independent, unlike the estimated
+            // absolute ceilings (which stay only as the 3x backstop above)
+            for (name, t1, t4) in &ops {
+                if !(name.starts_with("fwd_") || name.as_str() == "attn_tiny") {
+                    continue;
+                }
+                if *t4 > t1 * 1.25 {
+                    eprintln!(
+                        "[bench] REGRESSION {name}: 4-thread {t4:.2} ms > 1.25x own 1-thread reference {t1:.2} ms"
+                    );
+                    failed = true;
                 }
             }
             // eigen-stage gate: the summed eigen_sweep+eigen_sort cpu-ms of

@@ -62,7 +62,7 @@ impl GroupSvd {
             .map(|m| m.to_f32())
             .collect::<Vec<_>>();
         debug_assert!(cs.iter().all(|m| m.cols == d2));
-        GroupFactors { start_layer: self.start, b: b.to_f32(), cs }
+        GroupFactors::new(self.start, b.to_f32(), cs)
     }
 }
 

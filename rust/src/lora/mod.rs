@@ -217,6 +217,9 @@ pub fn finetune(
             }
         }
     }
+    // merged came from to_dense() (a fresh clone, empty pack cache), but be
+    // explicit: the in-place delta invalidates any packed panels
+    merged.reset_packs();
     Ok(LoraLog { losses, merged })
 }
 

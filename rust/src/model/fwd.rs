@@ -18,11 +18,24 @@
 
 use super::lowrank::{CompressedModel, Linear};
 use super::{ModelConfig, Weights};
+use crate::tensor::matmul::{gemm_f32_packed_serial, PackedMat};
 use crate::tensor::MatF;
 use crate::util::parallel::parallel_row_bands;
+use crate::util::profile::{self, Stage};
 
 const EPS: f32 = 1e-5;
 const ROPE_THETA: f32 = 1e4;
+
+// Streaming-softmax attention tiles: TQ query rows share each loaded
+// key/value tile of TK rows. Sized so one (TQ·hd + 2·TK·hd) working set
+// stays L1-resident at every config's head_dim.
+const ATTN_TQ: usize = 16;
+const ATTN_TK: usize = 32;
+
+// Fused lm_head/cross-entropy chunk: rows of logits materialized at once
+// per band thread (peak logits memory = threads · NLL_CHUNK · vocab, not
+// batch·seq · vocab).
+const NLL_CHUNK: usize = 16;
 
 // Calibration slots (must mirror `calib::gram_slot`):
 // 0 = input to wq/wk/wv, 1 = input to wo, 2 = input to w_gate/w_up,
@@ -57,10 +70,24 @@ impl<'a> Params<'a> {
             Params::Dense(w) => {
                 let (d1, d2) = w.config.matrix_dims(typ);
                 let t = &w.tensors[ModelConfig::param_index(typ)];
-                Linear::Dense { w: &t.data[l * d1 * d2..(l + 1) * d1 * d2], d1, d2 }
+                Linear::Dense {
+                    w: &t.data[l * d1 * d2..(l + 1) * d1 * d2],
+                    d1,
+                    d2,
+                    pack: Some(w.packs.site(typ, l)),
+                }
             }
             Params::Model(m) => m.linear(typ, l),
         }
+    }
+
+    /// The lm_head's packed panels (packed once per model instance; the
+    /// lm_head is never compressed, so both variants use the base registry).
+    fn lm_packed(&self) -> &'a PackedMat {
+        let w = self.weights();
+        let lm = w.by_name("lm_head");
+        let (d, v) = (w.config.d, w.config.vocab);
+        w.packs.lm_head().get_or_init(|| PackedMat::pack(&lm.data, d, v))
     }
 }
 
@@ -182,22 +209,35 @@ fn nll_impl(p: Params<'_>, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32>
     let t = seq - 1;
     let rows = batch * t;
     let hidden = forward_hidden_obs(p, tokens, batch, seq, t, None);
-    // batched logits: one rows×d×V GEMM (lm_head is never compressed)
-    let lm = p.weights().by_name("lm_head");
+    // fused lm_head projection + cross entropy: each band thread projects
+    // its rows in NLL_CHUNK-row chunks through the packed lm_head panels
+    // into a small logits scratch and consumes it immediately, so the
+    // rows×V logits slab is never materialized. Chunked serial GEMM keeps
+    // every logit's FP order identical to the one-big-GEMM path (the packed
+    // kernel's accumulation order per output element is row-local).
     let (d, v) = (cfg.d, cfg.vocab);
-    let logits = Linear::Dense { w: &lm.data, d1: d, d2: v }.matmul(&hidden, rows);
-    // per-position cross entropy, row-parallel
+    let lmp = p.lm_packed();
     let mut out = vec![0.0f32; rows];
-    parallel_row_bands(&mut out, rows, 1, |row0, band| {
-        for (i, o) in band.iter_mut().enumerate() {
-            let r = row0 + i;
-            let row = &logits[r * v..(r + 1) * v];
-            let max = row.iter().cloned().fold(f32::MIN, f32::max);
-            let logz = max + row.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
-            let (b, pos) = (r / t, r % t);
-            let target = tokens[b * seq + pos + 1] as usize;
-            *o = logz - row[target];
-        }
+    profile::time(Stage::Fwd, || {
+        parallel_row_bands(&mut out, rows, 1, |row0, band| {
+            let mut logits = vec![0.0f32; NLL_CHUNK * v];
+            let mut r0 = row0;
+            for chunk in band.chunks_mut(NLL_CHUNK) {
+                let bn = chunk.len();
+                let lbuf = &mut logits[..bn * v];
+                gemm_f32_packed_serial(&hidden[r0 * d..(r0 + bn) * d], bn, d, lmp, lbuf);
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let r = r0 + i;
+                    let row = &lbuf[i * v..(i + 1) * v];
+                    let max = row.iter().cloned().fold(f32::MIN, f32::max);
+                    let logz = max + row.iter().map(|x| (x - max).exp()).sum::<f32>().ln();
+                    let (b, pos) = (r / t, r % t);
+                    let target = tokens[b * seq + pos + 1] as usize;
+                    *o = logz - row[target];
+                }
+                r0 += bn;
+            }
+        });
     });
     out
 }
@@ -289,11 +329,14 @@ fn residual_add(x: &mut [f32], o: &[f32], rows: usize, d: usize) {
 
 fn rope_tables(t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
     let half = hd / 2;
+    // the frequency depends only on the lane, not the position: compute the
+    // `half` powf calls once instead of t×half times
+    let freqs: Vec<f32> =
+        (0..half).map(|i| ROPE_THETA.powf(-(i as f32) / half as f32)).collect();
     let mut cos = vec![0.0f32; t * half];
     let mut sin = vec![0.0f32; t * half];
     for p in 0..t {
-        for i in 0..half {
-            let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+        for (i, &freq) in freqs.iter().enumerate() {
             let ang = p as f32 * freq;
             cos[p * half + i] = ang.cos();
             sin[p * half + i] = ang.sin();
@@ -313,6 +356,103 @@ fn apply_rope(v: &mut [f32], p: usize, cos: &[f32], sin: &[f32]) {
         v[i] = x1 * c - x2 * s;
         v[half + i] = x2 * c + x1 * s;
     }
+}
+
+/// Blocked streaming-softmax attention over roped q/k/v buffers.
+///
+/// Work units are (batch, head) pairs; the output is head-major,
+/// `batch·h` rows of `t·hd` — one contiguous band per unit, so
+/// `parallel_row_bands` hands each thread whole units. Within a unit,
+/// query rows are processed in tiles of [`ATTN_TQ`] and keys/values in
+/// tiles of [`ATTN_TK`] (flash-attention style): each query keeps a running
+/// max `m`, denominator `l`, and unnormalized accumulator; when a tile
+/// raises the max, the accumulator and denominator are rescaled by
+/// `exp(m_old − m_new)` once, and the final division by `l` normalizes.
+///
+/// Determinism: for every output element the FP op sequence is a pure
+/// function of (t, hd, the tile constants) — tiles run in ascending key
+/// order and the thread split only chooses *which* units a thread runs,
+/// never the op order inside one. Hence 1/2/4-thread outputs are
+/// `to_bits`-identical (`rust/tests/determinism.rs`), and the kernel
+/// matches the exact two-pass softmax to ~1e-7 (pinned at 1e-5 against the
+/// scalar oracle in `rust/tests/forward_equivalence.rs`).
+#[allow(clippy::too_many_arguments)]
+fn attention_streaming(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    batch: usize,
+    t: usize,
+    kvd: usize,
+    h: usize,
+    rep: usize,
+    hd: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let d = h * hd;
+    let units = batch * h;
+    let mut hm = vec![0.0f32; units * t * hd];
+    parallel_row_bands(&mut hm, units, t * hd, |u0, band| {
+        let mut scores = [0.0f32; ATTN_TK];
+        let mut mrow = [f32::MIN; ATTN_TQ]; // running max per query
+        let mut lrow = [0.0f32; ATTN_TQ]; // running denominator per query
+        for (ui, ub) in band.chunks_exact_mut(t * hd).enumerate() {
+            let u = u0 + ui;
+            let (b, head) = (u / h, u % h);
+            let kv_head = head / rep;
+            for q0 in (0..t).step_by(ATTN_TQ) {
+                let q1 = (q0 + ATTN_TQ).min(t);
+                mrow[..q1 - q0].fill(f32::MIN);
+                lrow[..q1 - q0].fill(0.0);
+                // causal: keys 0..q1 suffice for every query in the tile
+                for k0 in (0..q1).step_by(ATTN_TK) {
+                    let k1 = (k0 + ATTN_TK).min(q1);
+                    // queries before k0 see nothing of this tile
+                    for qi in q0.max(k0)..q1 {
+                        let kend = k1.min(qi + 1);
+                        let qv = &q[(b * t + qi) * d + head * hd..][..hd];
+                        let mut tmax = f32::MIN;
+                        for j in k0..kend {
+                            let kv = &k[(b * t + j) * kvd + kv_head * hd..][..hd];
+                            let s =
+                                qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                            scores[j - k0] = s;
+                            tmax = tmax.max(s);
+                        }
+                        let mi = qi - q0;
+                        let acc = &mut ub[qi * hd..(qi + 1) * hd];
+                        if tmax > mrow[mi] {
+                            // rescale history to the new max (first tile has
+                            // no history: lrow is 0 and acc is all zeros)
+                            if lrow[mi] > 0.0 {
+                                let corr = (mrow[mi] - tmax).exp();
+                                for a in acc.iter_mut() {
+                                    *a *= corr;
+                                }
+                                lrow[mi] *= corr;
+                            }
+                            mrow[mi] = tmax;
+                        }
+                        for j in k0..kend {
+                            let pj = (scores[j - k0] - mrow[mi]).exp();
+                            lrow[mi] += pj;
+                            let vv = &v[(b * t + j) * kvd + kv_head * hd..][..hd];
+                            for (a, &vx) in acc.iter_mut().zip(vv) {
+                                *a += pj * vx;
+                            }
+                        }
+                    }
+                }
+                for qi in q0..q1 {
+                    let inv = 1.0 / lrow[qi - q0];
+                    for a in &mut ub[qi * hd..(qi + 1) * hd] {
+                        *a *= inv;
+                    }
+                }
+            }
+        }
+    });
+    hm
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -360,41 +500,24 @@ fn attention_block(
             }
         }
     });
-    // causal attention: each output row depends only on q/k/v, so rows
-    // split freely across threads with unchanged per-row FP order
-    let mut attn = vec![0.0f32; rows * d];
-    parallel_row_bands(&mut attn, rows, d, |row0, band| {
-        let mut scores = vec![0.0f32; t];
-        for (i, orow) in band.chunks_exact_mut(d).enumerate() {
-            let r = row0 + i;
-            let (b, pos) = (r / t, r % t);
-            for head in 0..h {
-                let kv_head = head / rep;
-                let qv = &q[r * d + head * hd..r * d + (head + 1) * hd];
-                let mut max = f32::MIN;
-                for j in 0..=pos {
-                    let krow = (b * t + j) * kvd + kv_head * hd;
-                    let kv = &k[krow..krow + hd];
-                    let s: f32 = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    scores[j] = s;
-                    max = max.max(s);
-                }
-                let mut denom = 0.0f32;
-                for s in scores[..=pos].iter_mut() {
-                    *s = (*s - max).exp();
-                    denom += *s;
-                }
-                let out = &mut orow[head * hd..(head + 1) * hd];
-                for j in 0..=pos {
-                    let pj = scores[j] / denom;
-                    let vrow = (b * t + j) * kvd + kv_head * hd;
-                    let vv = &v[vrow..vrow + hd];
-                    for i in 0..hd {
-                        out[i] += pj * vv[i];
-                    }
+    // blocked streaming-softmax attention (flash-style): head-major units
+    // fan out across threads, each unit runs key/value tiles with a running
+    // max/denominator; then a deterministic transpose back to row-major.
+    // Profiled as its own `attn` stage (it is not a GEMM).
+    let attn = profile::time(Stage::Attn, || {
+        let hm = attention_streaming(&q, &k, &v, batch, t, kvd, h, rep, hd, scale);
+        let mut attn = vec![0.0f32; rows * d];
+        parallel_row_bands(&mut attn, rows, d, |row0, band| {
+            for (i, row) in band.chunks_exact_mut(d).enumerate() {
+                let r = row0 + i;
+                let (b, pos) = (r / t, r % t);
+                for head in 0..h {
+                    let src = &hm[((b * h + head) * t + pos) * hd..][..hd];
+                    row[head * hd..(head + 1) * hd].copy_from_slice(src);
                 }
             }
-        }
+        });
+        attn
     });
     // output projection + residual
     if let Some(s) = sums.as_deref_mut() {

@@ -16,14 +16,45 @@
 //!  - `graph::build_compressed` emits the *factored* matmuls with the exact
 //!    allocated ranks for the runtime throughput path.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use super::{ModelConfig, Weights, COMPRESSIBLE};
 use crate::tensor::{
-    matmul::{gemm_f32, matmul_f32},
+    matmul::{gemm_f32, gemm_f32_packed, gemm_f32_packed_into, matmul_f32, PackedMat},
     Mat32,
 };
 use crate::util::profile::{self, Stage};
+
+thread_local! {
+    // Per-thread scratch for the (x·B) intermediate of the fused factored
+    // path. Grow-only: after the first call at a given working-set size the
+    // buffer is just reused, so steady-state serving does zero per-call heap
+    // allocations for the intermediate.
+    static MID_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+static SCRATCH_GROWS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of times the fused factored path had to (re)grow a thread-local
+/// intermediate buffer. Flat across repeated calls after warmup — the
+/// zero-per-call-allocation contract, asserted in `rust/tests/packing.rs`.
+pub fn scratch_grows() -> u64 {
+    SCRATCH_GROWS.load(Ordering::Relaxed)
+}
+
+fn with_mid_scratch<R>(n: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    MID_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < n {
+            SCRATCH_GROWS.fetch_add(1, Ordering::Relaxed);
+            buf.resize(n, 0.0);
+        }
+        f(&mut buf[..n])
+    })
+}
 
 /// One projection site y = x·W, resolved to its cheapest executable form.
 ///
@@ -34,10 +65,20 @@ use crate::util::profile::{self, Stage};
 /// profiled: `Stage::Fwd` vs `Stage::FwdLowrank`).
 #[derive(Clone, Copy, Debug)]
 pub enum Linear<'a> {
-    /// dense d1×d2 weight slab (row-major)
-    Dense { w: &'a [f32], d1: usize, d2: usize },
-    /// factored W ≈ B·C: B is d1×k, C is k×d2
-    Factored { b: &'a Mat32, c: &'a Mat32 },
+    /// dense d1×d2 weight slab (row-major); `pack` is the site's cached
+    /// panel slot (None = no cache, run the unpacked kernel)
+    Dense {
+        w: &'a [f32],
+        d1: usize,
+        d2: usize,
+        pack: Option<&'a OnceLock<PackedMat>>,
+    },
+    /// factored W ≈ B·C: B is d1×k, C is k×d2; `pack` caches both factors
+    Factored {
+        b: &'a Mat32,
+        c: &'a Mat32,
+        pack: Option<(&'a OnceLock<PackedMat>, &'a OnceLock<PackedMat>)>,
+    },
 }
 
 impl Linear<'_> {
@@ -45,7 +86,7 @@ impl Linear<'_> {
     pub fn dims(&self) -> (usize, usize) {
         match self {
             Linear::Dense { d1, d2, .. } => (*d1, *d2),
-            Linear::Factored { b, c } => (b.rows, c.cols),
+            Linear::Factored { b, c, .. } => (b.rows, c.cols),
         }
     }
 
@@ -54,32 +95,80 @@ impl Linear<'_> {
     /// Dense runs one m×d1×d2 GEMM; factored runs two skinny GEMMs
     /// `(x·B)·C` — cheaper whenever rank k is below the break-even
     /// `d1·d2/(d1+d2)` (`ModelConfig::kmax`), which the rank allocator
-    /// guarantees. Both paths inherit `gemm_f32`'s bit-determinism for any
-    /// thread count.
+    /// guarantees. Sites resolved through a model (`CompressedModel::linear`
+    /// / `Params::linear`) carry a pack slot: the weight is packed into
+    /// block-major panels once on first use (`OnceLock`), then every call
+    /// runs the packed kernel; the factored form additionally fuses
+    /// `(x·B)·C` through one per-thread scratch buffer so the intermediate
+    /// is never allocated per call. Packed and unpacked kernels are
+    /// byte-identical (`tensor::matmul`), so all paths inherit `gemm_f32`'s
+    /// bit-determinism for any thread count.
     pub fn matmul(&self, x: &[f32], rows: usize) -> Vec<f32> {
         match self {
-            Linear::Dense { w, d1, d2 } => {
-                profile::time(Stage::Fwd, || gemm_f32(x, rows, *d1, w, *d2))
-            }
-            Linear::Factored { b, c } => profile::time(Stage::FwdLowrank, || {
-                let mid = gemm_f32(x, rows, b.rows, &b.data, b.cols);
-                gemm_f32(&mid, rows, c.rows, &c.data, c.cols)
+            Linear::Dense { w, d1, d2, pack } => profile::time(Stage::Fwd, || match pack {
+                Some(slot) => {
+                    let bp = slot.get_or_init(|| PackedMat::pack(w, *d1, *d2));
+                    gemm_f32_packed(x, rows, *d1, bp)
+                }
+                None => gemm_f32(x, rows, *d1, w, *d2),
+            }),
+            Linear::Factored { b, c, pack } => profile::time(Stage::FwdLowrank, || match pack {
+                Some((bslot, cslot)) => {
+                    let bp = bslot.get_or_init(|| PackedMat::pack(&b.data, b.rows, b.cols));
+                    let cp = cslot.get_or_init(|| PackedMat::pack(&c.data, c.rows, c.cols));
+                    let mut out = vec![0.0f32; rows * c.cols];
+                    with_mid_scratch(rows * b.cols, |mid| {
+                        gemm_f32_packed_into(x, rows, b.rows, bp, mid);
+                        gemm_f32_packed_into(mid, rows, c.rows, cp, &mut out);
+                    });
+                    out
+                }
+                None => {
+                    let mid = gemm_f32(x, rows, b.rows, &b.data, b.cols);
+                    gemm_f32(&mid, rows, c.rows, &c.data, c.cols)
+                }
             }),
         }
     }
 }
 
+/// Lazily-packed GEMM panels for one group's factors: the shared basis and
+/// each per-layer coefficient block. Mirrors `model::PackRegistry` for the
+/// factored representation.
+#[derive(Debug, Default)]
+struct GroupPack {
+    b: OnceLock<PackedMat>,
+    cs: Vec<OnceLock<PackedMat>>,
+}
+
 /// Shared-basis factors for one group of consecutive layers.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct GroupFactors {
     pub start_layer: usize,
     /// shared basis, d1 × k
     pub b: Mat32,
     /// per-layer coefficients, each k × d2 (len == group size n)
     pub cs: Vec<Mat32>,
+    /// packed-panel cache (never saved, reset on clone)
+    pack: GroupPack,
+}
+
+impl Clone for GroupFactors {
+    fn clone(&self) -> Self {
+        // fresh pack cache: a clone may be mutated before serving
+        GroupFactors::new(self.start_layer, self.b.clone(), self.cs.clone())
+    }
 }
 
 impl GroupFactors {
+    pub fn new(start_layer: usize, b: Mat32, cs: Vec<Mat32>) -> Self {
+        let pack = GroupPack {
+            b: OnceLock::new(),
+            cs: (0..cs.len()).map(|_| OnceLock::new()).collect(),
+        };
+        GroupFactors { start_layer, b, cs, pack }
+    }
+
     pub fn rank(&self) -> usize {
         self.b.cols
     }
@@ -130,6 +219,11 @@ impl CompressedModel {
     /// the last one starting at or before `layer`: a binary search, not a
     /// scan.
     pub fn layer_factors(&self, typ: &str, layer: usize) -> Option<(&Mat32, &Mat32)> {
+        self.group_at(typ, layer).map(|(g, i)| (&g.b, &g.cs[i]))
+    }
+
+    /// The group covering (type, layer) plus the layer's index within it.
+    fn group_at(&self, typ: &str, layer: usize) -> Option<(&GroupFactors, usize)> {
         match self.reps.get(typ)? {
             TypeRep::Dense => None,
             TypeRep::Factored(groups) => {
@@ -139,7 +233,7 @@ impl CompressedModel {
                 }
                 let g = &groups[i - 1];
                 (layer < g.start_layer + g.n_layers())
-                    .then(|| (&g.b, &g.cs[layer - g.start_layer]))
+                    .then(|| (g, layer - g.start_layer))
             }
         }
     }
@@ -147,14 +241,42 @@ impl CompressedModel {
     /// Resolve the [`Linear`] operator serving (type, layer): the factored
     /// form when this site was compressed, else the dense slab of the base
     /// weight tensor. This is the single seam every pure-Rust projection
-    /// call goes through — forward, calibration, eval, and `RefBackend`.
+    /// call goes through — forward, calibration, eval, and `RefBackend` —
+    /// and it hands each site its cached pack slot, so every weight is
+    /// packed at most once per model instance no matter how many batches,
+    /// workers, or threads serve it.
     pub fn linear(&self, typ: &str, layer: usize) -> Linear<'_> {
-        if let Some((b, c)) = self.layer_factors(typ, layer) {
-            return Linear::Factored { b, c };
+        if let Some((g, i)) = self.group_at(typ, layer) {
+            return Linear::Factored {
+                b: &g.b,
+                c: &g.cs[i],
+                pack: Some((&g.pack.b, &g.pack.cs[i])),
+            };
         }
         let (d1, d2) = self.config().matrix_dims(typ);
         let t = &self.base.tensors[ModelConfig::param_index(typ)];
-        Linear::Dense { w: &t.data[layer * d1 * d2..(layer + 1) * d1 * d2], d1, d2 }
+        Linear::Dense {
+            w: &t.data[layer * d1 * d2..(layer + 1) * d1 * d2],
+            d1,
+            d2,
+            pack: Some(self.base.packs.site(typ, layer)),
+        }
+    }
+
+    /// Number of projection-site pack slots currently holding panels, across
+    /// the dense base registry and every factored group (test probe for the
+    /// pack-once contract).
+    pub fn packed_sites(&self) -> usize {
+        let mut n = self.base.packs.packed_sites();
+        for rep in self.reps.values() {
+            if let TypeRep::Factored(groups) = rep {
+                for g in groups {
+                    n += usize::from(g.pack.b.get().is_some());
+                    n += g.pack.cs.iter().filter(|s| s.get().is_some()).count();
+                }
+            }
+        }
+        n
     }
 
     /// Parameter count across the compressible weight types.
@@ -243,7 +365,7 @@ mod tests {
             .collect();
         m.reps.insert(
             "wq".into(),
-            TypeRep::Factored(vec![GroupFactors { start_layer: 0, b: b.clone(), cs: cs.clone() }]),
+            TypeRep::Factored(vec![GroupFactors::new(0, b.clone(), cs.clone())]),
         );
         assert!(m.achieved_ratio() > 0.0);
         let dense = m.to_dense();
@@ -268,11 +390,7 @@ mod tests {
         let cfg = m.config();
         let (d1, d2) = cfg.matrix_dims("wq");
         let k = 4usize;
-        let g = GroupFactors {
-            start_layer: 0,
-            b: Mat32::zeros(d1, k),
-            cs: vec![Mat32::zeros(k, d2)],
-        };
+        let g = GroupFactors::new(0, Mat32::zeros(d1, k), vec![Mat32::zeros(k, d2)]);
         let stored = g.param_count();
         m.reps.insert("wq".into(), TypeRep::Factored(vec![g]));
         let want =
@@ -291,16 +409,8 @@ mod tests {
         let mut m = tiny_model();
         let cfg = m.config();
         let (d1, d2) = cfg.matrix_dims("wv");
-        let g0 = GroupFactors {
-            start_layer: 0,
-            b: Mat32::zeros(d1, 3),
-            cs: vec![Mat32::zeros(3, d2)],
-        };
-        let g1 = GroupFactors {
-            start_layer: 1,
-            b: Mat32::zeros(d1, 5),
-            cs: vec![Mat32::zeros(5, d2)],
-        };
+        let g0 = GroupFactors::new(0, Mat32::zeros(d1, 3), vec![Mat32::zeros(3, d2)]);
+        let g1 = GroupFactors::new(1, Mat32::zeros(d1, 5), vec![Mat32::zeros(5, d2)]);
         m.reps.insert("wv".into(), TypeRep::Factored(vec![g0, g1]));
         assert_eq!(m.layer_factors("wv", 0).unwrap().0.cols, 3);
         assert_eq!(m.layer_factors("wv", 1).unwrap().0.cols, 5);
@@ -314,10 +424,8 @@ mod tests {
         let cfg = ModelConfig::by_name("s").unwrap();
         let mut m = CompressedModel::dense_passthrough(Weights::init(cfg, 2));
         let (d1, d2) = cfg.matrix_dims("wo");
-        let group = |start: usize, k: usize| GroupFactors {
-            start_layer: start,
-            b: Mat32::zeros(d1, k),
-            cs: vec![Mat32::zeros(k, d2)],
+        let group = |start: usize, k: usize| {
+            GroupFactors::new(start, Mat32::zeros(d1, k), vec![Mat32::zeros(k, d2)])
         };
         m.reps.insert("wo".into(), TypeRep::Factored(vec![group(1, 3), group(3, 5)]));
         assert!(m.layer_factors("wo", 0).is_none());
@@ -334,9 +442,10 @@ mod tests {
         let (d1, d2) = cfg.matrix_dims("wq");
         // dense site: slab must alias the base tensor's layer-1 window
         match m.linear("wq", 1) {
-            Linear::Dense { w, d1: a, d2: b } => {
+            Linear::Dense { w, d1: a, d2: b, pack } => {
                 assert_eq!((a, b), (d1, d2));
                 assert_eq!(w, &m.base.by_name("wq").data[d1 * d2..2 * d1 * d2]);
+                assert!(pack.is_some(), "model-resolved site must carry a pack slot");
             }
             Linear::Factored { .. } => panic!("passthrough resolved factored"),
         }
@@ -347,7 +456,7 @@ mod tests {
             .collect();
         m.reps.insert(
             "wq".into(),
-            TypeRep::Factored(vec![GroupFactors { start_layer: 0, b, cs }]),
+            TypeRep::Factored(vec![GroupFactors::new(0, b, cs)]),
         );
         assert!(matches!(m.linear("wq", 0), Linear::Factored { .. }));
         assert_eq!(m.linear("wq", 0).dims(), (d1, d2));
@@ -361,12 +470,36 @@ mod tests {
         let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect());
         let c = Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i % 7) as f32 - 3.0) * 0.03).collect());
         let x: Vec<f32> = (0..rows * d1).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
-        let factored = Linear::Factored { b: &b, c: &c }.matmul(&x, rows);
+        let factored = Linear::Factored { b: &b, c: &c, pack: None }.matmul(&x, rows);
         let w = matmul_f32(&b, &c);
-        let dense = Linear::Dense { w: &w.data, d1, d2 }.matmul(&x, rows);
+        let dense = Linear::Dense { w: &w.data, d1, d2, pack: None }.matmul(&x, rows);
         assert_eq!(factored.len(), rows * d2);
         for (f, d) in factored.iter().zip(&dense) {
             assert!((f - d).abs() < 1e-4, "{f} vs {d}");
         }
+    }
+
+    #[test]
+    fn packed_linear_is_byte_identical_to_unpacked() {
+        // the same site executed with and without its pack slot must agree
+        // to the bit, for both representations
+        let (d1, k, d2, rows) = (33usize, 6usize, 40usize, 9usize);
+        let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect());
+        let c = Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i % 7) as f32 - 3.0) * 0.03).collect());
+        let x: Vec<f32> = (0..rows * d1).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let fslot = (OnceLock::new(), OnceLock::new());
+        let unfused = Linear::Factored { b: &b, c: &c, pack: None }.matmul(&x, rows);
+        let fused =
+            Linear::Factored { b: &b, c: &c, pack: Some((&fslot.0, &fslot.1)) }.matmul(&x, rows);
+        assert_eq!(bits(&fused), bits(&unfused));
+
+        let w = matmul_f32(&b, &c);
+        let dslot = OnceLock::new();
+        let plain = Linear::Dense { w: &w.data, d1, d2, pack: None }.matmul(&x, rows);
+        let packed =
+            Linear::Dense { w: &w.data, d1, d2, pack: Some(&dslot) }.matmul(&x, rows);
+        assert_eq!(bits(&packed), bits(&plain));
     }
 }

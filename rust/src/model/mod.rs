@@ -18,8 +18,10 @@ pub mod lowrank;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::tensor::matmul::PackedMat;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use std::sync::OnceLock;
 
 /// Canonical parameter names, in artifact wire order.
 pub const PARAM_NAMES: [&str; 12] = [
@@ -177,11 +179,71 @@ impl Tensor {
     }
 }
 
+/// Lazily-packed GEMM panels for every dense projection site of a model:
+/// one slot per (compressible type, layer) plus one for `lm_head`. Weights
+/// are reused across every batch, so the serving forward packs each slab
+/// into a [`PackedMat`] exactly once (`OnceLock`) on first use and reuses
+/// the panels for the lifetime of the `Weights` — including across
+/// coordinator workers, which share the model behind an `Arc`.
+///
+/// Invariant: a slot must never be initialized before the tensor it shadows
+/// has its final bytes. All in-place weight mutation in the repo (trainer
+/// steps, LoRA merge, `to_dense`) happens on freshly constructed or
+/// freshly cloned `Weights` before any forward, and `Clone` resets the
+/// registry; `reset_packs` is the explicit escape hatch for mutators.
+#[derive(Debug, Default)]
+pub struct PackRegistry {
+    layers: usize,
+    slots: Vec<OnceLock<PackedMat>>,
+}
+
+impl PackRegistry {
+    pub fn new(config: &ModelConfig) -> Self {
+        let layers = config.layers;
+        PackRegistry {
+            layers,
+            slots: (0..COMPRESSIBLE.len() * layers + 1).map(|_| OnceLock::new()).collect(),
+        }
+    }
+
+    /// The pack slot of one (compressible type, layer) projection site.
+    pub fn site(&self, typ: &str, layer: usize) -> &OnceLock<PackedMat> {
+        let ti = COMPRESSIBLE.iter().position(|&t| t == typ).expect("not compressible");
+        assert!(layer < self.layers, "layer out of range");
+        &self.slots[ti * self.layers + layer]
+    }
+
+    /// The pack slot of the lm_head projection.
+    pub fn lm_head(&self) -> &OnceLock<PackedMat> {
+        &self.slots[COMPRESSIBLE.len() * self.layers]
+    }
+
+    /// Number of slots already packed (test probe).
+    pub fn packed_sites(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+}
+
 /// Dense model weights (canonical order).
-#[derive(Clone)]
 pub struct Weights {
     pub config: ModelConfig,
     pub tensors: Vec<Tensor>,
+    /// Per-site packed-panel cache for the serving GEMM (not part of the
+    /// model state proper: never saved, reset on clone).
+    pub packs: PackRegistry,
+}
+
+impl Clone for Weights {
+    fn clone(&self) -> Self {
+        // A clone is typically about to be mutated (`to_dense`, LoRA merge),
+        // so it starts with an empty pack cache rather than sharing panels
+        // that could go stale.
+        Weights {
+            config: self.config,
+            tensors: self.tensors.clone(),
+            packs: PackRegistry::new(&self.config),
+        }
+    }
 }
 
 impl Weights {
@@ -201,7 +263,13 @@ impl Weights {
                 Tensor { shape, data }
             })
             .collect();
-        Self { config, tensors }
+        Self { config, tensors, packs: PackRegistry::new(&config) }
+    }
+
+    /// Drop all cached GEMM panels. Call after mutating `tensors` in place
+    /// on a model that may already have served a forward pass.
+    pub fn reset_packs(&mut self) {
+        self.packs = PackRegistry::new(&self.config);
     }
 
     pub fn by_name(&self, name: &str) -> &Tensor {
@@ -271,7 +339,7 @@ impl Weights {
             off += n * 4;
             tensors.push(Tensor { shape, data });
         }
-        Ok((Self { config, tensors }, step))
+        Ok((Self { config, tensors, packs: PackRegistry::new(&config) }, step))
     }
 }
 

@@ -87,6 +87,10 @@ pub fn train(
             m[i].data = tensor_of(&outs[1 + n + i])?.0;
             v[i].data = tensor_of(&outs[1 + 2 * n + i])?.0;
         }
+        // the tensors just changed in place: any GEMM panels packed from a
+        // previous step's weights (e.g. an eval forward mid-training) are
+        // stale now
+        weights.reset_packs();
         if step % opts.log_every == 0 || step + 1 == opts.steps {
             losses.push((step, loss));
         }

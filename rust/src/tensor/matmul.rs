@@ -11,8 +11,13 @@
 
 use super::{Mat32, MatF};
 use crate::util::parallel::parallel_row_bands;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const BLOCK: usize = 64;
+
+/// Column width of a [`PackedMat`] panel. Equal to [`BLOCK`] so the packed
+/// kernel's j-extent matches the unpacked kernel's cache blocking.
+pub const PANEL: usize = 64;
 
 fn f64_band(a: &MatF, b: &MatF, row0: usize, cband: &mut [f64]) {
     let (k, n) = (a.cols, b.cols);
@@ -29,9 +34,6 @@ fn f64_band(a: &MatF, b: &MatF, row0: usize, cband: &mut [f64]) {
                     let crow = &mut cband[i * n..(i + 1) * n];
                     for kk in k0..k1 {
                         let av = arow[kk];
-                        if av == 0.0 {
-                            continue;
-                        }
                         let brow = &b.data[kk * n..(kk + 1) * n];
                         for j in j0..j1 {
                             crow[j] += av * brow[j];
@@ -100,15 +102,148 @@ pub fn vecmat_f32(x: &[f32], a: &Mat32) -> Vec<f32> {
     assert_eq!(x.len(), a.rows);
     let mut y = vec![0.0f32; a.cols];
     for (k, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
         let arow = a.row(k);
         for j in 0..a.cols {
             y[j] += xv * arow[j];
         }
     }
     y
+}
+
+// ---------------------------------------------------------------------------
+// Packed-panel GEMM
+// ---------------------------------------------------------------------------
+
+static PACK_OPS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-global count of [`PackedMat::pack`] calls. Tests read deltas of
+/// this around a region to assert that weight panels are packed exactly
+/// once per `Linear` site (the pack-once contract of the serving cache).
+pub fn pack_ops() -> u64 {
+    PACK_OPS.load(Ordering::Relaxed)
+}
+
+/// A k×n RHS repacked into block-major column panels for the serving GEMM.
+///
+/// Layout: the columns are split into panels of width [`PANEL`]; panel `jp`
+/// stores its k rows contiguously, each row padded to a fixed [`PANEL`]
+/// stride (`data[jp·k·PANEL + kk·PANEL + j] = b[kk·n + jp·PANEL + j]`, zero
+/// padding past the real width). The inner kernel then walks one panel with
+/// unit stride instead of striding `n` floats between k-steps, so every
+/// cache line it pulls is fully used. Weights are reused across every batch,
+/// which is why `model::lowrank` packs them once per site and caches the
+/// result (see `PackRegistry`).
+pub struct PackedMat {
+    /// k — contraction dimension (rows of the original B).
+    pub rows: usize,
+    /// n — output dimension (cols of the original B).
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for PackedMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PackedMat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl PackedMat {
+    /// Repack a row-major k×n slab into column panels. Counted in
+    /// [`pack_ops`] so the pack-once caching contract is testable.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(b.len(), k * n, "pack shape mismatch");
+        PACK_OPS.fetch_add(1, Ordering::Relaxed);
+        let np = n.div_ceil(PANEL);
+        let mut data = vec![0.0f32; np * k * PANEL];
+        for jp in 0..np {
+            let j0 = jp * PANEL;
+            let w = PANEL.min(n - j0);
+            let base = jp * k * PANEL;
+            for kk in 0..k {
+                data[base + kk * PANEL..base + kk * PANEL + w]
+                    .copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            }
+        }
+        PackedMat { rows: k, cols: n, data }
+    }
+
+    #[inline]
+    fn panel(&self, jp: usize) -> &[f32] {
+        &self.data[jp * self.rows * PANEL..(jp + 1) * self.rows * PANEL]
+    }
+}
+
+/// Packed-kernel band: same i/k blocking as [`f32_band`], panels instead of
+/// a j-block loop. For every output element the k-accumulation order is
+/// ascending within each k-block and blocks run in ascending order — exactly
+/// the order of the unpacked kernel — so packed and unpacked results are
+/// **byte-identical**; the panel layout and the register accumulator change
+/// only where operands are read from, never the FP op sequence.
+fn f32_band_packed(a: &[f32], k: usize, bp: &PackedMat, row0: usize, cband: &mut [f32]) {
+    let n = bp.cols;
+    cband.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    let brows = cband.len() / n;
+    let np = n.div_ceil(PANEL);
+    for i0 in (0..brows).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(brows);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for jp in 0..np {
+                let j0 = jp * PANEL;
+                let w = PANEL.min(n - j0);
+                let panel = bp.panel(jp);
+                for i in i0..i1 {
+                    let gi = row0 + i;
+                    let arow = &a[gi * k..(gi + 1) * k];
+                    let crow = &mut cband[i * n + j0..i * n + j0 + w];
+                    // Register-blocked accumulator: load the C row once per
+                    // k-block instead of once per k-step. The running value
+                    // and the order of adds into it are unchanged.
+                    let mut acc = [0.0f32; PANEL];
+                    acc[..w].copy_from_slice(crow);
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        let prow = &panel[kk * PANEL..kk * PANEL + w];
+                        for (c, &pv) in acc[..w].iter_mut().zip(prow) {
+                            *c += av * pv;
+                        }
+                    }
+                    crow.copy_from_slice(&acc[..w]);
+                }
+            }
+        }
+    }
+}
+
+/// C = A * Bp with a pre-packed RHS; row-band parallel like [`gemm_f32`]
+/// and byte-identical to it (see [`f32_band_packed`]).
+pub fn gemm_f32_packed(a: &[f32], m: usize, k: usize, bp: &PackedMat) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * bp.cols];
+    gemm_f32_packed_into(a, m, k, bp, &mut c);
+    c
+}
+
+/// [`gemm_f32_packed`] into a caller-owned buffer (overwritten, may be
+/// dirty) — the fused factored path reuses one scratch buffer per thread
+/// instead of allocating the (x·B) intermediate on every call.
+pub fn gemm_f32_packed_into(a: &[f32], m: usize, k: usize, bp: &PackedMat, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm lhs shape mismatch");
+    assert_eq!(k, bp.rows, "gemm packed rhs shape mismatch");
+    assert_eq!(c.len(), m * bp.cols, "gemm out shape mismatch");
+    parallel_row_bands(c, m, bp.cols, |row0, band| f32_band_packed(a, k, bp, row0, band));
+}
+
+/// Serial (no-spawn) [`gemm_f32_packed_into`] for callers already inside a
+/// parallel region — e.g. the fused lm_head/cross-entropy band loop, which
+/// runs one packed GEMM per row chunk on its own band thread.
+pub fn gemm_f32_packed_serial(a: &[f32], m: usize, k: usize, bp: &PackedMat, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm lhs shape mismatch");
+    assert_eq!(k, bp.rows, "gemm packed rhs shape mismatch");
+    assert_eq!(c.len(), m * bp.cols, "gemm out shape mismatch");
+    f32_band_packed(a, k, bp, 0, c);
 }
 
 #[cfg(test)]
@@ -196,6 +331,55 @@ mod tests {
         let t4 = gemm_f32(&a.data, 37, 70, &b.data, 23);
         set_threads(0);
         assert_eq!(t1, t4, "gemm_f32 not thread-invariant");
+    }
+
+    #[test]
+    fn packed_gemm_is_byte_identical_to_unpacked_over_shapes() {
+        let mut rng = Rng::new(11);
+        // ragged in every dimension: partial panels, partial k/i blocks
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 130, 33), (37, 70, 129), (16, 200, 64)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let want = gemm_f32(&a, m, k, &b, n);
+            let bp = PackedMat::pack(&b, k, n);
+            let got = gemm_f32_packed(&a, m, k, &bp);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "packed != unpacked at ({m},{k},{n})");
+            // serial variant and dirty-buffer reuse give the same bytes
+            let mut dirty = vec![f32::NAN; m * n];
+            gemm_f32_packed_serial(&a, m, k, &bp, &mut dirty);
+            assert_eq!(bits(&dirty), bits(&want), "serial packed at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_is_thread_invariant() {
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (97, 65, 51);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bp = PackedMat::pack(&b, k, n);
+        set_threads(1);
+        let base = gemm_f32_packed(&a, m, k, &bp);
+        for t in [2, 3, 4, 8] {
+            set_threads(t);
+            let got = gemm_f32_packed(&a, m, k, &bp);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "packed gemm @ {t} threads"
+            );
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn pack_ops_counts_packs() {
+        let before = pack_ops();
+        let b: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let _p = PackedMat::pack(&b, 2, 3);
+        let _q = PackedMat::pack(&b, 3, 2);
+        assert!(pack_ops() >= before + 2);
     }
 
     #[test]

@@ -141,9 +141,6 @@ impl MatF {
                 let brow = b.row(k);
                 for i in 0..brows {
                     let a = arow[i0 + i];
-                    if a == 0.0 {
-                        continue;
-                    }
                     let orow = &mut band[i * ocols..(i + 1) * ocols];
                     for j in 0..ocols {
                         orow[j] += a * brow[j];

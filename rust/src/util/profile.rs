@@ -1,17 +1,20 @@
 //! Per-stage timing for the compression engine and the serving forward.
 //!
-//! Nine stages cover the hot path end to end: calibration forward passes,
+//! Ten stages cover the hot path end to end: calibration forward passes,
 //! Gram formation (calib Gram accumulation + the A·Aᵀ / AᵀA products inside
 //! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve — split
 //! into its sweep loop (`eigen_sweep`, the blocked-parallel part) and the
 //! final sort/permute (`eigen_sort`, sequential and cheap) so the profile
 //! shows exactly which part of the old `eigen` stage parallelized —
 //! truncation (factor extraction, including the unwhitening solve), dense
-//! reconstruction, and the two serving-forward GEMM stages: `fwd` (dense
+//! reconstruction, the two serving-forward GEMM stages: `fwd` (dense
 //! y = x·W projections) and `fwd_lowrank` (factored y = (x·B)·C
-//! projections). The split lets the coordinator tests assert that factored
-//! serving never reconstructs (`reconstruct` calls stay flat while
-//! `fwd_lowrank` climbs). Counters are process-global atomics so they can be
+//! projections), and `attn` — the blocked streaming-softmax attention
+//! kernel, the serving forward's non-GEMM hot loop. The split lets the
+//! coordinator tests assert that factored serving never reconstructs
+//! (`reconstruct` calls stay flat while `fwd_lowrank` climbs), and the
+//! `attn_tiny` bench row regression-gate the attention rewrite. Counters
+//! are process-global atomics so they can be
 //! bumped from worker threads without plumbing a handle through every call;
 //! `cpu_ms` therefore sums time across threads (it can exceed wall time —
 //! that's the point: wall/cpu shows how well a stage parallelizes).
@@ -38,21 +41,22 @@ pub enum Stage {
     Reconstruct = 6,
     Fwd = 7,
     FwdLowrank = 8,
+    Attn = 9,
 }
 
-pub const STAGE_NAMES: [&str; 9] = [
+pub const STAGE_NAMES: [&str; 10] = [
     "calib", "gram", "whiten", "eigen_sweep", "eigen_sort", "truncate", "reconstruct",
-    "fwd", "fwd_lowrank",
+    "fwd", "fwd_lowrank", "attn",
 ];
 
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
-static NANOS: [AtomicU64; 9] = [ZERO; 9];
-static CALLS: [AtomicU64; 9] = [ZERO; 9];
+static NANOS: [AtomicU64; 10] = [ZERO; 10];
+static CALLS: [AtomicU64; 10] = [ZERO; 10];
 
 /// Zero all stage counters (call before a profiled run).
 pub fn reset() {
-    for i in 0..9 {
+    for i in 0..STAGE_NAMES.len() {
         NANOS[i].store(0, Ordering::Relaxed);
         CALLS[i].store(0, Ordering::Relaxed);
     }
@@ -114,7 +118,7 @@ pub struct CompressProfile {
 /// Read the counters into a [`CompressProfile`]. `wall_ms` is the caller's
 /// end-to-end wall time for the profiled region.
 pub fn snapshot(wall_ms: f64) -> CompressProfile {
-    let stages = (0..9)
+    let stages = (0..STAGE_NAMES.len())
         .map(|i| StageTiming {
             name: STAGE_NAMES[i],
             cpu_ms: NANOS[i].load(Ordering::Relaxed) as f64 / 1e6,
@@ -143,6 +147,11 @@ impl CompressProfile {
             .filter(|s| s.name.starts_with("fwd"))
             .map(|s| s.cpu_ms)
             .sum()
+    }
+
+    /// Cpu-ms of one stage by name (0.0 for unknown names).
+    pub fn stage_ms(&self, name: &str) -> f64 {
+        self.stages.iter().find(|s| s.name == name).map_or(0.0, |s| s.cpu_ms)
     }
 
     /// Human-readable table for terminal output.
@@ -222,10 +231,33 @@ mod tests {
         assert!(j.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
         assert_eq!(j.get("wall_ms").and_then(|v| v.as_f64()), Some(2.5));
         let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
-        assert_eq!(stages.len(), 9);
+        assert_eq!(stages.len(), 10);
         assert_eq!(stages[0].get("name").and_then(|v| v.as_str()), Some("calib"));
         assert_eq!(stages[7].get("name").and_then(|v| v.as_str()), Some("fwd"));
         assert_eq!(stages[8].get("name").and_then(|v| v.as_str()), Some("fwd_lowrank"));
+        assert_eq!(stages[9].get("name").and_then(|v| v.as_str()), Some("attn"));
+    }
+
+    #[test]
+    fn attn_stage_counts_and_is_not_a_fwd_stage() {
+        let _g = LOCK.lock().unwrap();
+        let before = snapshot(0.0);
+        time(Stage::Attn, || std::hint::black_box(1 + 1));
+        let after = snapshot(0.0);
+        let calls = |p: &CompressProfile, name: &str| {
+            p.stages.iter().find(|s| s.name == name).unwrap().calls
+        };
+        assert!(calls(&after, "attn") >= calls(&before, "attn") + 1);
+        assert!(after.stage_ms("attn") >= before.stage_ms("attn"));
+        // fwd_ms must keep its historical meaning (the "fwd*" GEMM stages):
+        // a profile with only attn time reports zero fwd cpu-ms
+        let only_attn = CompressProfile {
+            threads: 1,
+            wall_ms: 0.0,
+            stages: vec![StageTiming { name: "attn", cpu_ms: 5.0, calls: 1 }],
+        };
+        assert_eq!(only_attn.fwd_ms(), 0.0);
+        assert_eq!(only_attn.stage_ms("attn"), 5.0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Determinism suite: parallel compression output must be bit-identical to
 //! a single-threaded run, across all six methods, both pipelines (plain
-//! and §4.1 compensated), and the blocked Jacobi eigensolver. This is the
+//! and §4.1 compensated), the blocked Jacobi eigensolver, the packed-panel
+//! GEMM, and the blocked streaming-softmax serving forward. This is the
 //! contract that lets `--threads N` be a pure speed knob — CI runs the
 //! whole test suite under a 1/4-thread `DRANK_THREADS` matrix on top of
 //! these explicit cross-count checks.
@@ -16,7 +17,8 @@ use drank::compress::{methods, pipeline, CompressOpts, Method};
 use drank::data::DataBundle;
 use drank::linalg::eigen::jacobi_eigen_blocked;
 use drank::model::lowrank::{CompressedModel, TypeRep};
-use drank::model::{ModelConfig, Weights};
+use drank::model::{fwd, ModelConfig, Weights};
+use drank::tensor::matmul::{gemm_f32, gemm_f32_packed, PackedMat};
 use drank::tensor::MatF;
 use drank::util::parallel::set_threads;
 use drank::util::rng::Rng;
@@ -114,6 +116,56 @@ fn blocked_eigensolver_bit_identical_across_thread_counts() {
             let vecst: Vec<u64> = et.vectors.data.iter().map(|x| x.to_bits()).collect();
             assert_eq!(vals1, valst, "eigenvalues diverged at {t} threads (n={n})");
             assert_eq!(vecs1, vecst, "eigenvectors diverged at {t} threads (n={n})");
+        }
+    }
+    set_threads(0);
+}
+
+#[test]
+fn packed_gemm_bit_identical_to_unpacked_across_thread_counts() {
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let mut rng = Rng::new(23);
+    // ragged shapes: partial final panel (130 % 64), sub-panel n, and a
+    // k that straddles several BLOCK-sized k-blocks
+    for (m, k, n) in [(65usize, 130usize, 33usize), (48, 37, 130), (96, 200, 64)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bp = PackedMat::pack(&b, k, n);
+        set_threads(1);
+        let plain: Vec<u32> = gemm_f32(&a, m, k, &b, n).iter().map(|x| x.to_bits()).collect();
+        let packed1: Vec<u32> =
+            gemm_f32_packed(&a, m, k, &bp).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(plain, packed1, "packed != unpacked bits ({m}x{k}x{n})");
+        for t in [2usize, 4] {
+            set_threads(t);
+            let packedt: Vec<u32> =
+                gemm_f32_packed(&a, m, k, &bp).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(packed1, packedt, "packed gemm diverged at {t} threads ({m}x{k}x{n})");
+        }
+    }
+    set_threads(0);
+}
+
+#[test]
+fn streaming_attention_forward_bit_identical_across_thread_counts() {
+    // the blocked streaming-softmax attention at sequence lengths that
+    // span many ATTN_TQ/ATTN_TK tiles, plain and GQA: each output row's
+    // FP order is fixed by the tile schedule, so thread count must be a
+    // pure speed knob for the whole serving forward
+    let _guard = THREAD_LOCK.lock().unwrap();
+    let fingerprint = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for (name, seed) in [("s", 29u64), ("gqa", 37u64)] {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        let w = Weights::init(cfg, seed);
+        let mut r = Rng::new(seed.wrapping_add(1));
+        let (b, s) = (2usize, 96usize);
+        let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+        set_threads(1);
+        let f1 = fingerprint(&fwd::nll(&w, &toks, b, s));
+        for t in [2usize, 4] {
+            set_threads(t);
+            let ft = fingerprint(&fwd::nll(&w, &toks, b, s));
+            assert_eq!(f1, ft, "{name} forward diverged at {t} threads");
         }
     }
     set_threads(0);

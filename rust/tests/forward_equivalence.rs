@@ -3,7 +3,9 @@
 //! Three contracts, all artifact-free:
 //!  (a) the batched row-band-parallel GEMM forward matches a scalar
 //!      per-token oracle (a frozen copy of the historical loop-level
-//!      forward) to 1e-5 NLL on the tiny model;
+//!      forward) to 1e-5 NLL on the tiny, long-sequence ("s", seq 96) and
+//!      GQA configs — the long runs drive the blocked streaming-softmax
+//!      attention across many query/key tiles;
 //!  (b) factored serving (`fwd::nll_model`) matches `to_dense()` serving
 //!      to within factorization tolerance for all six methods — the
 //!      (x·B)·C vs x·(B·C) association gap, nothing more;
@@ -299,6 +301,41 @@ fn batched_forward_matches_scalar_oracle_on_gqa() {
     let w = Weights::init(cfg, 21);
     let mut r = Rng::new(22);
     let (b, s) = (2usize, 24usize);
+    let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+    let got = fwd::nll(&w, &toks, b, s);
+    let want = oracle::nll(&w, &toks, b, s);
+    for (i, (g, o)) in got.iter().zip(&want).enumerate() {
+        assert!((g - o).abs() < 1e-5, "position {i}: batched {g} vs scalar {o}");
+    }
+}
+
+#[test]
+fn batched_forward_matches_scalar_oracle_on_long_sequences() {
+    // seq 96 spans several ATTN_TQ=16 query tiles and ATTN_TK=32 key
+    // tiles, so the streaming-softmax rescale path (running max rising
+    // mid-row across tile boundaries) is exercised — not just the
+    // single-tile case the tiny config covers
+    let cfg = ModelConfig::by_name("s").unwrap();
+    let w = Weights::init(cfg, 31);
+    let mut r = Rng::new(32);
+    let (b, s) = (2usize, 96usize);
+    let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
+    let got = fwd::nll(&w, &toks, b, s);
+    let want = oracle::nll(&w, &toks, b, s);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, o)) in got.iter().zip(&want).enumerate() {
+        assert!((g - o).abs() < 1e-5, "position {i}: batched {g} vs scalar {o}");
+    }
+}
+
+#[test]
+fn batched_forward_matches_scalar_oracle_on_gqa_long_sequences() {
+    // GQA head sharing (kv_head = head / rep) combined with a sequence
+    // long enough that every query tile walks multiple k/v tiles
+    let cfg = ModelConfig::by_name("gqa").unwrap();
+    let w = Weights::init(cfg, 33);
+    let mut r = Rng::new(34);
+    let (b, s) = (1usize, 96usize);
     let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
     let got = fwd::nll(&w, &toks, b, s);
     let want = oracle::nll(&w, &toks, b, s);

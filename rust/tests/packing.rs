@@ -1,0 +1,150 @@
+//! Pack-once and zero-alloc contracts of the packed-panel serving path.
+//!
+//! The serving forward packs every weight slab into block-major panels
+//! (`tensor::matmul::PackedMat`) lazily, exactly once per projection site,
+//! and the fused factored path `(x·B)·C` reuses one per-thread scratch
+//! buffer for the intermediate. Both contracts are observable only through
+//! process-global counters (`pack_ops`, `scratch_grows`), so this suite is
+//! its own test binary: no other crate tests run in this process to bump
+//! the counters concurrently, and a local lock serializes the tests here.
+
+use std::sync::Mutex;
+
+use drank::calib::CalibStats;
+use drank::compress::{methods, CompressOpts, Method};
+use drank::model::lowrank::{self, CompressedModel, TypeRep};
+use drank::model::{fwd, ModelConfig, Weights, COMPRESSIBLE};
+use drank::tensor::matmul::pack_ops;
+use drank::util::parallel::set_threads;
+use drank::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tiny_setup(seed: u64) -> (ModelConfig, Weights, Vec<i32>) {
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, seed);
+    let mut r = Rng::new(seed.wrapping_add(50));
+    let toks: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|_| r.below(cfg.vocab) as i32).collect();
+    (cfg, w, toks)
+}
+
+fn tiny_factored(seed: u64) -> (ModelConfig, CompressedModel, Vec<i32>) {
+    let (cfg, w, toks) = tiny_setup(seed);
+    let stats = CalibStats::synthetic(&cfg, seed.wrapping_add(7));
+    let opts = CompressOpts {
+        method: Method::DRank,
+        ratio: 0.3,
+        group_layers: 2,
+        ..Default::default()
+    };
+    let (model, _) = methods::compress(&w, &stats, &opts).unwrap();
+    assert!(model.achieved_ratio() > 0.0, "no compression — tests would be vacuous");
+    (cfg, model, toks)
+}
+
+/// Pack slots one full forward must initialize: per compressible type,
+/// one panel per dense layer, plus one shared-basis panel per group and
+/// one coefficient panel per covered layer; plus the lm_head.
+fn expected_packs(cfg: &ModelConfig, model: &CompressedModel) -> usize {
+    let mut expect = 1usize; // lm_head
+    for typ in COMPRESSIBLE {
+        match &model.reps[typ] {
+            TypeRep::Dense => expect += cfg.layers,
+            TypeRep::Factored(groups) => {
+                let covered: usize = groups.iter().map(|g| g.n_layers()).sum();
+                expect += groups.len() + covered + (cfg.layers - covered);
+            }
+        }
+    }
+    expect
+}
+
+#[test]
+fn dense_weights_pack_each_site_exactly_once() {
+    let _g = LOCK.lock().unwrap();
+    let (cfg, w, toks) = tiny_setup(41);
+    assert_eq!(w.packs.packed_sites(), 0);
+    let p0 = pack_ops();
+    let first = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    // 7 compressible types × layers, plus lm_head
+    let sites = COMPRESSIBLE.len() * cfg.layers + 1;
+    assert_eq!(pack_ops() - p0, sites as u64, "first forward packs every site once");
+    assert_eq!(w.packs.packed_sites(), sites);
+    // steady state: no re-packing, identical output bits
+    let p1 = pack_ops();
+    for _ in 0..3 {
+        let again = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+        assert_eq!(
+            again.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            first.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    assert_eq!(pack_ops(), p1, "repeat forwards must not re-pack");
+    assert_eq!(w.packs.packed_sites(), sites);
+}
+
+#[test]
+fn factored_model_packs_each_site_exactly_once_and_shares_group_bases() {
+    let _g = LOCK.lock().unwrap();
+    let (cfg, model, toks) = tiny_factored(43);
+    assert_eq!(model.packed_sites(), 0);
+    let expect = expected_packs(&cfg, &model);
+    let p0 = pack_ops();
+    let _ = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq);
+    assert_eq!(pack_ops() - p0, expect as u64, "factored forward packs every site once");
+    assert_eq!(model.packed_sites(), expect);
+    // a shared basis is one slot per *group*, so a multi-layer group packs
+    // strictly fewer panels than two per covered layer
+    let dense_upper = 2 * COMPRESSIBLE.len() * cfg.layers + 1;
+    assert!(expect < dense_upper, "group bases not shared: {expect} >= {dense_upper}");
+    let p1 = pack_ops();
+    let _ = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq);
+    assert_eq!(pack_ops(), p1, "repeat factored forwards must not re-pack");
+}
+
+#[test]
+fn pack_cache_survives_thread_count_changes_but_not_clones() {
+    let _g = LOCK.lock().unwrap();
+    let (cfg, w, toks) = tiny_setup(47);
+    set_threads(1);
+    let _ = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    let p0 = pack_ops();
+    set_threads(4);
+    let _ = fwd::nll(&w, &toks, cfg.batch, cfg.seq);
+    set_threads(0);
+    assert_eq!(pack_ops(), p0, "thread-count change must not re-pack");
+    // clones are for mutation: they start with an empty cache
+    let w2 = w.clone();
+    assert!(w.packs.packed_sites() > 0);
+    assert_eq!(w2.packs.packed_sites(), 0, "clone must reset the pack cache");
+    let (_, model, mtoks) = tiny_factored(48);
+    let _ = fwd::nll_model(&model, &mtoks, cfg.batch, cfg.seq);
+    assert!(model.packed_sites() > 0);
+    assert_eq!(model.clone().packed_sites(), 0, "model clone must reset pack caches");
+    // to_dense clones the base, so its registry is empty too — its tensors
+    // are about to be overwritten with reconstructions
+    assert_eq!(model.to_dense().packs.packed_sites(), 0);
+}
+
+#[test]
+fn fused_factored_path_reuses_scratch_with_zero_per_call_growth() {
+    let _g = LOCK.lock().unwrap();
+    let (cfg, model, toks) = tiny_factored(53);
+    // warmup: packs panels and grows this thread's scratch to its
+    // steady-state size
+    let first = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq);
+    let g0 = lowrank::scratch_grows();
+    for _ in 0..3 {
+        let again = fwd::nll_model(&model, &toks, cfg.batch, cfg.seq);
+        assert_eq!(
+            again.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            first.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+    assert_eq!(
+        lowrank::scratch_grows(),
+        g0,
+        "steady-state factored serving must not grow the intermediate scratch"
+    );
+}
