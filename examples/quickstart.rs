@@ -3,14 +3,16 @@
 //!   cargo run --release --example quickstart
 //!
 //! Trains a tiny LM for a few steps, calibrates on synthetic WikiText-2,
-//! compresses it with D-Rank at 30%, and compares perplexity against the
-//! uncompressed model and an equally-sized SVD-LLM baseline.
+//! compresses it with D-Rank at 30%, compares perplexity against the
+//! uncompressed model and an equally-sized SVD-LLM baseline, then
+//! generates a short continuation through the KV-cached decode path.
 
 use drank::calib::CalibOpts;
 use drank::compress::{pipeline, CompressOpts, Method};
 use drank::data::synlang::Domain;
 use drank::data::DataBundle;
 use drank::eval;
+use drank::model::fwd::{self, GenerateOpts};
 use drank::model::{ModelConfig, Weights};
 use drank::runtime::trainer::{train, TrainOpts};
 use drank::runtime::Engine;
@@ -36,6 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. compress at 30% with D-Rank and with SVD-LLM
     let copts = CalibOpts { batches: 8, ..Default::default() };
+    let mut compressed = None;
     for method in [Method::SvdLlm, Method::DRank] {
         let opts = CompressOpts { method, ratio: 0.3, group_layers: 2, ..Default::default() };
         let (model, _plan) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
@@ -45,7 +48,18 @@ fn main() -> anyhow::Result<()> {
             method.name(),
             model.achieved_ratio()
         );
+        if method == Method::DRank {
+            compressed = Some(model);
+        }
     }
+
+    // 4. generate from the compressed model: one batched prefill of the
+    //    prompt, then single-token KV-cached decode steps on the factors
+    let model = compressed.expect("drank model");
+    let prompt: Vec<i32> = test[..8].iter().map(|&t| t as i32).collect();
+    let gopts = GenerateOpts { max_new_tokens: 12, ..Default::default() };
+    let new_tokens = fwd::generate_model(&model, &prompt, &gopts);
+    println!("greedy 12-token continuation of {prompt:?}: {new_tokens:?}");
     println!("done — see examples/e2e_train_compress_serve.rs for the full system");
     Ok(())
 }

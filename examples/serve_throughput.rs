@@ -9,7 +9,9 @@
 //! compression ratio — and with `--workers N` the coordinator scales the
 //! same workload across N backend instances. `--backend ref` runs the
 //! pure-Rust reference forward end to end (random-init weights if no
-//! checkpoint exists), so a bare checkout can drive the full stack.
+//! checkpoint exists), so a bare checkout can drive the full stack, and
+//! additionally exercises the KV-cached `Generate` endpoint (the xla
+//! backend has no decode path, so that section is ref-only).
 
 use drank::calib::CalibOpts;
 use drank::compress::{pipeline, CompressOpts, Method};
@@ -93,7 +95,7 @@ fn main() -> anyhow::Result<()> {
         let (m, _) = pipeline::compress_model(&engine, &weights, &data, &copts, &opts)?;
         m // the server builds its own runtime; engine drops here
     };
-    let m1 = run_load(compressed, stream, requests, clients, workers, &backend)?;
+    let m1 = run_load(compressed.clone(), stream.clone(), requests, clients, workers, &backend)?;
     println!(
         "throughput {:.0} tok/s, p50 {:.1} ms, p99 {:.1} ms, occupancy {:.2}, utilization {:.2}",
         m1.throughput_tps(),
@@ -106,5 +108,36 @@ fn main() -> anyhow::Result<()> {
         "speedup: {:.2}x",
         m1.throughput_tps() / m0.throughput_tps().max(1e-9)
     );
+
+    // generation rides the same queue as scoring via the `Generate` request
+    // kind; only the reference backend carries the KV-cached decode path
+    if backend == "ref" {
+        println!("== generation (KV-cached decode, compressed model) ==");
+        let cfg = compressed.config();
+        let (prompt_len, max_new) = (cfg.seq / 4, cfg.seq / 4);
+        let gen_requests = args.usize_or("gen-requests", 8);
+        let sopts = ServerOpts { workers, ..Default::default() };
+        let server = spawn_model_server(compressed, cfg.batch, cfg.seq, "ref", sopts)?;
+        let client = server.client();
+        let mut rng = Rng::new(7);
+        for r in 0..gen_requests {
+            let start = rng.below(stream.len() - prompt_len);
+            let resp = client
+                .generate(stream[start..start + prompt_len].to_vec(), max_new)
+                .expect("generate");
+            if r == 0 {
+                let shown = resp.tokens.len().min(12);
+                println!("first continuation ({max_new} new): {:?}…", &resp.tokens[..shown]);
+            }
+        }
+        drop(client);
+        let mg = server.shutdown()?;
+        println!(
+            "{} generated tokens, {:.0} decode tok/s, p50 {:.1} ms",
+            mg.generated_tokens,
+            mg.decode_tps(),
+            mg.p50_ms()
+        );
+    }
     Ok(())
 }

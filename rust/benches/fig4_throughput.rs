@@ -1,8 +1,10 @@
 //! Figure 4: serving throughput (tokens/sec) of the dense model vs
 //! compressed models at ratios 20–50%, through the coordinator over
 //! runtime-compiled factored graphs — plus a worker-count scaling curve
-//! over the pure-Rust reference backend, and a factored-vs-dense
-//! crossover curve (Figure 4c) over the same backend.
+//! over the pure-Rust reference backend, a factored-vs-dense crossover
+//! curve (Figure 4c) over the same backend, and a KV-cached generation
+//! throughput curve (Figure 4d) through the coordinator's `Generate`
+//! endpoint, dense and factored.
 //!
 //! Expected shape: every compressed model >= dense; throughput increases
 //! with the compression ratio; D-Rank >= Basis Sharing (its allocations
@@ -172,4 +174,71 @@ fn main() {
         );
     }
     common::emit(&tc, "fig4_throughput_factored");
+
+    // ---- generation curve (reference backend) ----------------------------
+    // tokens/sec of the KV-cached `Generate` endpoint as the decode length
+    // grows. Per-token cost rises with the live prefix (cached attention is
+    // O(prefix)), so decode tok/s decays gently with length; the factored
+    // model's single-token projections are two skinny vec×mats, never a
+    // reconstructed dense matrix.
+    let gen_requests = common::env_usize("DRANK_GEN_REQUESTS", 16);
+    let mut tg = Table::new(
+        "Figure 4d: generation throughput (reference backend)",
+        &["Model", "new tokens", "decode tok/s", "p50 ms"],
+    );
+    let cfg = b.weights.config;
+    let prompt_len = (cfg.seq / 4).max(1);
+    let news: Vec<usize> = if common::fast() {
+        vec![cfg.seq / 8, cfg.seq / 2]
+    } else {
+        vec![cfg.seq / 8, cfg.seq / 4, cfg.seq / 2]
+    };
+    let gen_models: Vec<(String, CompressedModel)> = vec![
+        ("dense".into(), CompressedModel::dense_passthrough(b.weights.clone())),
+        ("drank 30%".into(), b.compress(&stats, &common::opts(Method::DRank, 0.3, 2))),
+    ];
+    for (name, model) in &gen_models {
+        for &max_new in &news {
+            let server = spawn_model_server(
+                model.clone(),
+                cfg.batch,
+                cfg.seq,
+                "ref",
+                ServerOpts { workers: 1, ..Default::default() },
+            )
+            .expect("spawn");
+            let clients = 4usize;
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let client = server.client();
+                let stream = stream.clone();
+                let per = gen_requests / clients;
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(200 + c as u64);
+                    for _ in 0..per {
+                        let start = rng.below(stream.len() - prompt_len);
+                        let resp = client
+                            .generate(stream[start..start + prompt_len].to_vec(), max_new)
+                            .expect("generate");
+                        assert_eq!(resp.tokens.len(), max_new);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let m = server.shutdown().expect("shutdown");
+            tg.row(vec![
+                name.clone(),
+                format!("{max_new}"),
+                format!("{:.0}", m.decode_tps()),
+                format!("{:.1}", m.p50_ms()),
+            ]);
+            eprintln!(
+                "generate {name}, {max_new} new tokens: {:.0} decode tok/s",
+                m.decode_tps()
+            );
+        }
+    }
+    common::emit(&tg, "fig4_throughput_generation");
 }

@@ -8,9 +8,13 @@
 //!  2. thread-scaling rows — the same op at 1 vs 4 threads, asserting the
 //!     outputs are byte-identical while reporting the speedup (this now
 //!     includes the batched serving forward, dense and factored),
-//!  3. a per-stage `CompressProfile` of a full artifact-free compression
+//!  3. KV-cached generation rows — prefill 1→4T scaling (gated like the
+//!     other serving rows) and cached decode vs full-prefix recompute of
+//!     the same suffix, gated hard in-bench at ≥2x; decode throughput
+//!     lands standalone in `runs/reports/generate_tiny.json`,
+//!  4. a per-stage `CompressProfile` of a full artifact-free compression
 //!     run on the `tiny` config,
-//!  4. a factored-vs-dense-reconstructed ref-serving comparison on `tiny`
+//!  5. a factored-vs-dense-reconstructed ref-serving comparison on `tiny`
 //!     (written standalone as `runs/reports/serve_factored_tiny.json`;
 //!     the factored run must never touch the `Reconstruct` stage).
 //!
@@ -388,6 +392,130 @@ fn main() {
         ]);
         ops.push(("attn_tiny".into(), t1, t4));
     }
+    // KV-cached generation on `tiny` at seq 96: prefill thread-scaling
+    // (same relative gate as the other serving rows) and cached decode vs
+    // recomputing the full prefix for every emitted token — the whole
+    // reason the cache exists, gated hard in-bench at ≥2x
+    {
+        use drank::model::fwd;
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 5);
+        let (prompt_len, total) = (64usize, 96usize);
+        let toks: Vec<i32> = (0..total).map(|i| (i % cfg.vocab) as i32).collect();
+        let suffix = &toks[prompt_len..];
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+        // prefill is the batched forward plus cache writes: byte-identical
+        // across thread counts, and expected to scale like fwd_dense
+        set_threads(1);
+        let want_p = {
+            let mut st = fwd::DecodeState::new(&cfg, total);
+            bits(&fwd::prefill(&w, &toks[..prompt_len], &mut st))
+        };
+        set_threads(4);
+        {
+            let mut st = fwd::DecodeState::new(&cfg, total);
+            assert_eq!(
+                bits(&fwd::prefill(&w, &toks[..prompt_len], &mut st)),
+                want_p,
+                "prefill not thread-invariant"
+            );
+        }
+        let (t1, t4) = scale_pair(
+            || {
+                let mut st = fwd::DecodeState::new(&cfg, total);
+                let _ = fwd::prefill(&w, &toks[..prompt_len], &mut st);
+            },
+            reps,
+        );
+        t.row(vec![
+            "prefill".into(),
+            format!("tiny 1x{prompt_len} @1->4T"),
+            format!("{t1:.2} -> {t4:.2}"),
+            format!("{:.2}x", t1 / t4.max(1e-9)),
+        ]);
+        ops.push(("prefill_tiny".into(), t1, t4));
+
+        // cached: one prefill + 32 single-token decode steps; recompute:
+        // one full batched forward over the whole growing prefix per token
+        // (what serving the suffix costs without a KV cache)
+        set_threads(1);
+        let cached_ms = median_time(
+            || {
+                let mut st = fwd::DecodeState::new(&cfg, total);
+                let _ = fwd::prefill(&w, &toks[..prompt_len], &mut st);
+                for &tok in suffix {
+                    let _ = fwd::decode_step(&w, tok, &mut st);
+                }
+            },
+            reps,
+        );
+        let recompute_ms = median_time(
+            || {
+                for n in prompt_len..total {
+                    let mut st = fwd::DecodeState::new(&cfg, n + 1);
+                    let _ = fwd::prefill(&w, &toks[..=n], &mut st);
+                }
+            },
+            reps,
+        );
+        let speedup = recompute_ms / cached_ms.max(1e-9);
+        t.row(vec![
+            "decode(cached/recompute)".into(),
+            format!("tiny {prompt_len}+{} @1T", suffix.len()),
+            format!("{cached_ms:.2} vs {recompute_ms:.2}"),
+            format!("{speedup:.2}x (gate: >=2x)"),
+        ]);
+        ops.push(("decode_tiny".into(), cached_ms, cached_ms));
+        assert!(
+            speedup >= 2.0,
+            "cached decode only {speedup:.2}x over full-prefix recompute at seq {total} (need >=2x)"
+        );
+
+        // decode-only throughput (prefill excluded): the tokens/sec number
+        // the §Decode docs quote
+        let mut decode_times = Vec::with_capacity(reps);
+        for rep in 0..=reps {
+            let mut st = fwd::DecodeState::new(&cfg, total);
+            let _ = fwd::prefill(&w, &toks[..prompt_len], &mut st);
+            let timer = Timer::start();
+            for &tok in suffix {
+                let _ = fwd::decode_step(&w, tok, &mut st);
+            }
+            if rep > 0 {
+                // first pass is warmup (pack caches, branch predictors)
+                decode_times.push(timer.millis());
+            }
+        }
+        decode_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let decode_ms = decode_times[decode_times.len() / 2];
+        let decode_tps = suffix.len() as f64 / (decode_ms / 1e3);
+        t.row(vec![
+            "decode".into(),
+            format!("tiny {} steps @1T", suffix.len()),
+            format!("{decode_ms:.2}"),
+            format!("{decode_tps:.0} tok/s"),
+        ]);
+        std::fs::create_dir_all("runs/reports").expect("mkdir runs/reports");
+        std::fs::write(
+            "runs/reports/generate_tiny.json",
+            Json::obj(vec![
+                ("model", Json::str("tiny")),
+                ("prompt_len", Json::num(prompt_len as f64)),
+                ("new_tokens", Json::num(suffix.len() as f64)),
+                ("decode_ms", Json::num(decode_ms)),
+                ("decode_tps", Json::num(decode_tps)),
+                ("cached_ms", Json::num(cached_ms)),
+                ("recompute_ms", Json::num(recompute_ms)),
+                ("cached_speedup", Json::num(speedup)),
+                ("prefill_t1_ms", Json::num(t1)),
+                ("prefill_t4_ms", Json::num(t4)),
+            ])
+            .emit(),
+        )
+        .expect("write generate_tiny.json");
+        eprintln!("[bench] wrote runs/reports/generate_tiny.json");
+    }
     set_threads(configured);
 
     // factored vs dense-reconstructed ref serving on `tiny`: same requests
@@ -588,7 +716,10 @@ fn main() {
             // reference — machine-independent, unlike the estimated
             // absolute ceilings (which stay only as the 3x backstop above)
             for (name, t1, t4) in &ops {
-                if !(name.starts_with("fwd_") || name.as_str() == "attn_tiny") {
+                if !(name.starts_with("fwd_")
+                    || name.as_str() == "attn_tiny"
+                    || name.as_str() == "prefill_tiny")
+                {
                     continue;
                 }
                 if *t4 > t1 * 1.25 {

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::graph::CompiledForward;
+use crate::model::fwd::GenerateOpts;
 use crate::model::lowrank::CompressedModel;
 use crate::model::{fwd, Weights};
 
@@ -63,6 +64,11 @@ pub trait ScoreBackend {
         assert!(rows >= 1 && rows <= b, "rows {rows} out of 1..={b}");
         assert!((2..=s).contains(&used_seq), "used_seq {used_seq} out of 2..={s}");
         assert_eq!(tokens.len(), rows * used_seq, "tokens must be [rows, used_seq]");
+        if rows == b && used_seq == s {
+            // already the fixed shape: the pad copy and the slice-down are
+            // both identities, so skip cloning the token buffer entirely
+            return self.nll(tokens);
+        }
         let mut padded = vec![0i32; b * s];
         for r in 0..rows {
             padded[r * s..r * s + used_seq]
@@ -75,6 +81,27 @@ pub trait ScoreBackend {
         }
         Ok(out)
     }
+
+    /// The generation seam, when this backend has one. The coordinator
+    /// routes `Generate` requests through this; backends without a decode
+    /// path (the fixed-shape compiled graph) return `None` and the worker
+    /// rejects such requests with a typed error instead of panicking.
+    fn generator(&self) -> Option<&dyn GenerateBackend> {
+        None
+    }
+}
+
+/// The generation seam beside [`ScoreBackend`]: autoregressive prompt →
+/// tokens, backed by the KV-cached prefill/decode path (`model::fwd`).
+/// Same thread-locality contract as [`ScoreBackend`] (no `Send` bound).
+pub trait GenerateBackend {
+    /// Maximum total tokens per sequence (prompt + generated) — the
+    /// worker's admission budget for `Generate` requests.
+    fn max_tokens(&self) -> usize;
+
+    /// Generate up to `opts.max_new_tokens` tokens after `prompt`,
+    /// returning only the new tokens.
+    fn generate(&self, prompt: &[i32], opts: &GenerateOpts) -> Result<Vec<i32>>;
 }
 
 impl ScoreBackend for CompiledForward {
@@ -208,6 +235,36 @@ impl ScoreBackend for RefBackend {
         self.check_tokens(tokens)?;
         Ok(self.model.nll(tokens, rows, used_seq))
     }
+
+    fn generator(&self) -> Option<&dyn GenerateBackend> {
+        Some(self)
+    }
+}
+
+impl GenerateBackend for RefBackend {
+    fn max_tokens(&self) -> usize {
+        self.seq
+    }
+
+    /// KV-cached generation on whichever representation this backend
+    /// serves: dense weights, or a compressed model's factors (never
+    /// reconstructing dense weights — the same zero-`Reconstruct` property
+    /// as scoring, asserted in `rust/tests/decode.rs`).
+    fn generate(&self, prompt: &[i32], opts: &GenerateOpts) -> Result<Vec<i32>> {
+        anyhow::ensure!(!prompt.is_empty(), "generate needs a non-empty prompt");
+        anyhow::ensure!(
+            prompt.len() + opts.max_new_tokens <= self.seq,
+            "prompt ({}) + max_new_tokens ({}) exceeds the {}-token budget",
+            prompt.len(),
+            opts.max_new_tokens,
+            self.seq
+        );
+        self.check_tokens(prompt)?;
+        Ok(match &self.model {
+            RefModel::Dense(w) => fwd::generate(w, prompt, opts),
+            RefModel::Factored(m) => fwd::generate_model(m, prompt, opts),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +358,67 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 2e-2, "{x} vs {y}");
         }
+    }
+
+    /// Fixed-shape backend that records the address of the token buffer
+    /// it is handed, to observe whether `nll_window` cloned it.
+    struct PtrProbe {
+        inner: RefBackend,
+        seen: std::cell::Cell<*const i32>,
+    }
+
+    impl ScoreBackend for PtrProbe {
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+        fn seq(&self) -> usize {
+            self.inner.seq()
+        }
+        fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            self.seen.set(tokens.as_ptr());
+            self.inner.nll(tokens)
+        }
+    }
+
+    #[test]
+    fn full_shape_window_skips_the_pad_clone() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 16);
+        let be = PtrProbe {
+            inner: RefBackend::new(w, cfg.batch, cfg.seq),
+            seen: std::cell::Cell::new(std::ptr::null()),
+        };
+        let toks: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| ((i * 3) % cfg.vocab) as i32).collect();
+        let windowed = be.nll_window(&toks, cfg.batch, cfg.seq).unwrap();
+        // the fast path hands the caller's buffer straight through
+        assert_eq!(be.seen.get(), toks.as_ptr(), "full-shape window must not clone tokens");
+        let direct = be.nll(&toks).unwrap();
+        assert_eq!(windowed, direct);
+        // a genuinely partial window still goes through the padded copy
+        let part = be.nll_window(&toks[..8], 1, 8).unwrap();
+        assert_ne!(be.seen.get(), toks.as_ptr());
+        assert_eq!(part.len(), 7);
+    }
+
+    #[test]
+    fn generator_seam_is_some_for_ref_and_none_for_fixed() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let w = Weights::init(cfg, 17);
+        let be = RefBackend::new(w.clone(), cfg.batch, cfg.seq);
+        let fixed = FixedShape(RefBackend::new(w.clone(), cfg.batch, cfg.seq));
+        assert!(fixed.generator().is_none(), "default seam must opt out");
+        let g = be.generator().expect("RefBackend generates");
+        assert_eq!(g.max_tokens(), cfg.seq);
+        let prompt: Vec<i32> = (1..=6).collect();
+        let opts = GenerateOpts { max_new_tokens: 4, ..Default::default() };
+        let got = g.generate(&prompt, &opts).unwrap();
+        assert_eq!(got, fwd::generate(&w, &prompt, &opts));
+        // typed rejection, not a panic, when the budget is exceeded
+        let over = GenerateOpts { max_new_tokens: cfg.seq, ..Default::default() };
+        assert!(g.generate(&prompt, &over).is_err());
+        assert!(g.generate(&[], &opts).is_err());
+        assert!(g.generate(&[cfg.vocab as i32], &opts).is_err());
     }
 
     #[test]

@@ -23,10 +23,19 @@
 //! Shutdown closes the queue and drains every in-flight request before the
 //! workers exit; per-worker metrics, queue-depth samples, and padding
 //! efficiency land in [`Metrics`].
+//!
+//! Two request kinds share the queue: `Score` (batched NLL over a fixed
+//! window) and `Generate` (KV-cached prefill + decode, served through the
+//! [`GenerateBackend`] seam). Batches are always kind-homogeneous;
+//! generation batches are assembled under a token budget
+//! (Σ prompt+max_new ≤ batch·seq) and bucketed by *total* length, so a
+//! short prompt asking for many tokens rides with its true cost class.
+//! Backends without a decode path reject `Generate` requests with the
+//! typed [`ScoreError::NotGenerative`] instead of panicking a worker.
 
 pub mod backend;
 
-pub use backend::{RefBackend, ScoreBackend};
+pub use backend::{GenerateBackend, RefBackend, ScoreBackend};
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -39,18 +48,55 @@ use anyhow::Result;
 
 use crate::util::percentile;
 
-/// A scoring request: token ids (<= backend seq len, or it is rejected).
+/// What a queued request asks the backend to do with its tokens.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RequestKind {
+    /// Score the tokens: per-position NLL over the request's own window.
+    Score,
+    /// Autoregressively extend the tokens (the prompt) by up to
+    /// `max_new_tokens`, greedy at `temperature == 0.0`, seeded
+    /// categorical sampling otherwise.
+    Generate { max_new_tokens: usize, temperature: f64, seed: u64 },
+}
+
+/// A queued request: token ids plus what to do with them. A request's
+/// *total* length (`tokens + max_new` for generation) must fit the
+/// backend's seq capacity, or it is rejected with `TooLong`.
 pub struct Request {
     pub tokens: Vec<u32>,
+    pub kind: RequestKind,
     pub reply: Sender<ScoreResult>,
     pub enqueued: Instant,
+}
+
+impl Request {
+    /// Token-slots this request will occupy when executed: its own length
+    /// for scoring, prompt plus the full generation budget for generation
+    /// (admission and bucketing must price the KV cache it will fill, not
+    /// just the prompt).
+    fn total_len(&self) -> usize {
+        match self.kind {
+            RequestKind::Score => self.tokens.len(),
+            RequestKind::Generate { max_new_tokens, .. } => {
+                self.tokens.len() + max_new_tokens
+            }
+        }
+    }
+
+    fn is_generate(&self) -> bool {
+        matches!(self.kind, RequestKind::Generate { .. })
+    }
 }
 
 /// Per-request response.
 #[derive(Clone, Debug)]
 pub struct Response {
-    /// per-token NLL over the request's own tokens (len = tokens-1)
+    /// per-token NLL over the request's own tokens (len = tokens-1);
+    /// empty for `Generate` responses
     pub nll: Vec<f32>,
+    /// newly generated token ids (len <= max_new_tokens); empty for
+    /// `Score` responses
+    pub tokens: Vec<i32>,
     pub latency_ms: f64,
     /// which worker served the request
     pub worker: usize,
@@ -70,6 +116,10 @@ pub enum ScoreError {
     /// request instead of letting one malformed id poison a whole batch
     /// (or panic a worker).
     InvalidToken { id: u32, vocab: usize },
+    /// A `Generate` request reached a backend with no decode path (the
+    /// fixed-shape compiled graph) — rejected per request, typed, instead
+    /// of panicking the worker that drew it.
+    NotGenerative,
     /// The server stopped before (or while) handling the request.
     Shutdown,
     /// The backend failed to build or to execute.
@@ -86,6 +136,9 @@ impl fmt::Display for ScoreError {
             }
             ScoreError::InvalidToken { id, vocab } => {
                 write!(f, "token id {id} outside vocabulary of {vocab}")
+            }
+            ScoreError::NotGenerative => {
+                write!(f, "backend has no generation path")
             }
             ScoreError::Shutdown => write!(f, "server stopped"),
             ScoreError::Backend(e) => write!(f, "backend error: {e}"),
@@ -128,6 +181,9 @@ pub struct Metrics {
     pub rejected_timeout: usize,
     pub rejected_too_long: usize,
     pub rejected_invalid_token: usize,
+    pub rejected_not_generative: usize,
+    /// tokens decoded by `Generate` requests (subset of `tokens`)
+    pub generated_tokens: usize,
     pub per_worker: Vec<WorkerMetrics>,
 }
 
@@ -171,6 +227,14 @@ impl Metrics {
             + self.rejected_timeout
             + self.rejected_too_long
             + self.rejected_invalid_token
+            + self.rejected_not_generative
+    }
+
+    /// Decode throughput: generated tokens per busy second (generation is
+    /// decode-bound, so busy time is the honest denominator for a mixed
+    /// score/generate workload).
+    pub fn decode_tps(&self) -> f64 {
+        self.generated_tokens as f64 / self.busy_secs.max(1e-9)
     }
 }
 
@@ -300,21 +364,17 @@ impl SharedQueue {
         r
     }
 
-    /// Pop the first request in `bucket` (or any request when `None`),
-    /// waiting until `deadline` for one to arrive.
-    fn pop_matching(&self, deadline: Instant, bucket: Option<u32>) -> Option<Request> {
+    /// Pop the first request satisfying `pred`, waiting until `deadline`
+    /// for one to arrive. The predicate is what keeps batches
+    /// kind-homogeneous and (for generation) inside the token budget.
+    fn pop_matching<P: Fn(&Request) -> bool>(
+        &self,
+        deadline: Instant,
+        pred: P,
+    ) -> Option<Request> {
         let mut s = self.state.lock().unwrap();
         loop {
-            let idx = match bucket {
-                None => {
-                    if s.q.is_empty() {
-                        None
-                    } else {
-                        Some(0)
-                    }
-                }
-                Some(bk) => s.q.iter().position(|r| bucket_of(r.tokens.len()) == bk),
-            };
+            let idx = s.q.iter().position(|r| pred(r));
             if let Some(i) = idx {
                 let r = s.q.remove(i);
                 self.not_full.notify_one();
@@ -360,9 +420,36 @@ impl Client {
     /// the response. Over-length and deadline violations come back as
     /// typed errors.
     pub fn score(&self, tokens: Vec<u32>) -> ScoreResult {
+        self.submit(tokens, RequestKind::Score)
+    }
+
+    /// Blocking generate call: greedy continuation of `prompt` by up to
+    /// `max_new_tokens` tokens (`Response::tokens`). Prompt + budget must
+    /// fit the backend's seq capacity or `TooLong` comes back; a backend
+    /// without a decode path answers `NotGenerative`.
+    pub fn generate(&self, prompt: Vec<u32>, max_new_tokens: usize) -> ScoreResult {
+        self.submit(
+            prompt,
+            RequestKind::Generate { max_new_tokens, temperature: 0.0, seed: 0 },
+        )
+    }
+
+    /// [`generate`](Self::generate) with seeded temperature sampling
+    /// (deterministic for a fixed seed; `temperature == 0.0` is greedy).
+    pub fn generate_sampled(
+        &self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        temperature: f64,
+        seed: u64,
+    ) -> ScoreResult {
+        self.submit(prompt, RequestKind::Generate { max_new_tokens, temperature, seed })
+    }
+
+    fn submit(&self, tokens: Vec<u32>, kind: RequestKind) -> ScoreResult {
         let (rtx, rrx) = std::sync::mpsc::channel();
         self.queue
-            .push_wait(Request { tokens, reply: rtx, enqueued: Instant::now() })?;
+            .push_wait(Request { tokens, kind, reply: rtx, enqueued: Instant::now() })?;
         match rrx.recv() {
             Ok(r) => r,
             Err(_) => Err(ScoreError::Shutdown),
@@ -373,8 +460,12 @@ impl Client {
     /// `QueueFull` instead of blocking when the queue is at capacity.
     pub fn try_score(&self, tokens: Vec<u32>) -> ScoreResult {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        let pushed =
-            self.queue.try_push(Request { tokens, reply: rtx, enqueued: Instant::now() });
+        let pushed = self.queue.try_push(Request {
+            tokens,
+            kind: RequestKind::Score,
+            reply: rtx,
+            enqueued: Instant::now(),
+        });
         if let Err(e) = pushed {
             if e == ScoreError::QueueFull {
                 self.metrics.lock().unwrap().rejected_queue_full += 1;
@@ -527,16 +618,27 @@ struct WorkerCtx {
     seq: usize,
     vocab: Option<usize>,
     deadline: Option<Duration>,
+    /// whether the backend exposes a [`GenerateBackend`] seam — when it
+    /// doesn't, `Generate` requests are rejected here, typed, per request
+    can_generate: bool,
     metrics: Arc<Mutex<Metrics>>,
 }
 
 impl WorkerCtx {
     /// Admission control: replies (and counts) rejections, passes the rest.
     fn screen(&self, req: Request) -> Option<Request> {
-        if req.tokens.len() > self.seq {
+        if req.is_generate() && !self.can_generate {
+            self.metrics.lock().unwrap().rejected_not_generative += 1;
+            let _ = req.reply.send(Err(ScoreError::NotGenerative));
+            return None;
+        }
+        // admission prices the request's *total* footprint: for generation
+        // that is prompt + max_new (the KV cache it will fill), so an
+        // over-budget ask is rejected up front rather than truncated
+        if req.total_len() > self.seq {
             self.metrics.lock().unwrap().rejected_too_long += 1;
             let _ = req.reply.send(Err(ScoreError::TooLong {
-                len: req.tokens.len(),
+                len: req.total_len(),
                 seq: self.seq,
             }));
             return None;
@@ -620,6 +722,7 @@ where
         seq,
         vocab: backend.vocab(),
         deadline: opts.deadline,
+        can_generate: backend.generator().is_some(),
         metrics: metrics.clone(),
     };
     loop {
@@ -640,6 +743,11 @@ where
             }
         };
         let depth = queue.depth();
+        if first.is_generate() {
+            serve_generate_batch(&backend, first, &queue, &opts, &ctx, depth, bsz, seq);
+            metrics.lock().unwrap().wall_secs = started.elapsed().as_secs_f64();
+            continue;
+        }
         // bucketing only pays off when the backend can shrink its window;
         // a fixed-shape graph runs full [batch, seq] regardless, so
         // fragmenting its batches by length would only hurt occupancy
@@ -649,10 +757,15 @@ where
             None
         };
         let mut batch = vec![first];
-        // fill the rest of the batch (same length bucket) within the window
+        // fill the rest of the batch (same-kind, same length bucket)
+        // within the window
         let fill_deadline = Instant::now() + opts.batch_window;
         while batch.len() < bsz {
-            match queue.pop_matching(fill_deadline, bucket) {
+            let popped = queue.pop_matching(fill_deadline, |r| {
+                !r.is_generate()
+                    && bucket.is_none_or(|bk| bucket_of(r.tokens.len()) == bk)
+            });
+            match popped {
                 None => break,
                 Some(r) => {
                     if let Some(ok) = ctx.screen(r) {
@@ -728,6 +841,94 @@ where
     }
 }
 
+/// Assemble and serve one generation batch. The first request is already
+/// admitted; the fill pulls only other `Generate` requests whose *total*
+/// length (prompt + max_new) shares its bucket and fits the remaining
+/// token budget (`batch * seq` slots per dispatch — the same capacity a
+/// scoring batch occupies). Decode is a single-sequence path, so the
+/// batch executes sequentially; batching still amortizes queue latency
+/// and keeps admission/bucketing uniform with scoring.
+#[allow(clippy::too_many_arguments)]
+fn serve_generate_batch<B: ScoreBackend>(
+    backend: &B,
+    first: Request,
+    queue: &SharedQueue,
+    opts: &ServerOpts,
+    ctx: &WorkerCtx,
+    depth: usize,
+    bsz: usize,
+    seq: usize,
+) {
+    let generator = backend.generator().expect("screened: backend generates");
+    let budget = bsz * seq;
+    let bucket =
+        if opts.bucket_by_length { Some(bucket_of(first.total_len())) } else { None };
+    let mut total = first.total_len();
+    let mut batch = vec![first];
+    let fill_deadline = Instant::now() + opts.batch_window;
+    while batch.len() < bsz && total < budget {
+        let room = budget - total;
+        let popped = queue.pop_matching(fill_deadline, |r| {
+            r.is_generate()
+                && r.total_len() <= room
+                && bucket.is_none_or(|bk| bucket_of(r.total_len()) == bk)
+        });
+        match popped {
+            None => break,
+            Some(r) => {
+                if let Some(ok) = ctx.screen(r) {
+                    total += ok.total_len();
+                    batch.push(ok);
+                }
+            }
+        }
+    }
+    let busy = Instant::now();
+    // (prompt len, generated len, latency) per successfully served request
+    let mut served: Vec<(usize, usize, f64)> = Vec::with_capacity(batch.len());
+    for req in batch {
+        let prompt: Vec<i32> = req.tokens.iter().map(|&t| t as i32).collect();
+        let RequestKind::Generate { max_new_tokens, temperature, seed } = req.kind else {
+            unreachable!("generate batches are kind-homogeneous");
+        };
+        let gopts =
+            crate::model::fwd::GenerateOpts { max_new_tokens, temperature, seed };
+        match generator.generate(&prompt, &gopts) {
+            Ok(new_tokens) => {
+                let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                served.push((prompt.len(), new_tokens.len(), latency_ms));
+                let _ = req.reply.send(Ok(Response {
+                    nll: Vec::new(),
+                    tokens: new_tokens,
+                    latency_ms,
+                    worker: ctx.id,
+                }));
+            }
+            Err(e) => {
+                let _ = req.reply.send(Err(ScoreError::Backend(e.to_string())));
+            }
+        }
+    }
+    let busy_secs = busy.elapsed().as_secs_f64();
+    let mut m = ctx.metrics.lock().unwrap();
+    m.batches += 1;
+    m.busy_secs += busy_secs;
+    m.queue_depth_sum += depth;
+    m.queue_depth_samples += 1;
+    m.per_worker[ctx.id].batches += 1;
+    m.per_worker[ctx.id].busy_secs += busy_secs;
+    for &(prompt_len, new_len, latency_ms) in &served {
+        m.requests += 1;
+        m.tokens += prompt_len + new_len;
+        m.generated_tokens += new_len;
+        // decode executes exactly the slots it fills — no padding waste
+        m.padded_tokens += prompt_len + new_len;
+        m.latencies_ms.push(latency_ms);
+        m.per_worker[ctx.id].requests += 1;
+        m.per_worker[ctx.id].tokens += prompt_len + new_len;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -766,7 +967,35 @@ mod tests {
 
     fn req(len: usize) -> (Request, std::sync::mpsc::Receiver<ScoreResult>) {
         let (tx, rx) = std::sync::mpsc::channel();
-        (Request { tokens: vec![1; len], reply: tx, enqueued: Instant::now() }, rx)
+        (
+            Request {
+                tokens: vec![1; len],
+                kind: RequestKind::Score,
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn gen_req(
+        len: usize,
+        max_new: usize,
+    ) -> (Request, std::sync::mpsc::Receiver<ScoreResult>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (
+            Request {
+                tokens: vec![1; len],
+                kind: RequestKind::Generate {
+                    max_new_tokens: max_new,
+                    temperature: 0.0,
+                    seed: 0,
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
     }
 
     #[test]
@@ -796,15 +1025,81 @@ mod tests {
         q.try_push(long).unwrap();
         q.try_push(short).unwrap();
         let deadline = Instant::now() + Duration::from_millis(5);
-        let got = q.pop_matching(deadline, Some(bucket_of(3))).unwrap();
+        let want = bucket_of(3);
+        let got =
+            q.pop_matching(deadline, |r| bucket_of(r.tokens.len()) == want).unwrap();
         assert_eq!(got.tokens.len(), 3); // skipped the longer request
         assert_eq!(q.depth(), 1);
         // no match in bucket -> times out without popping
         let deadline = Instant::now() + Duration::from_millis(5);
-        assert!(q.pop_matching(deadline, Some(bucket_of(3))).is_none());
+        assert!(q.pop_matching(deadline, |r| bucket_of(r.tokens.len()) == want).is_none());
         assert_eq!(q.depth(), 1);
-        // unbucketed pop takes whatever is first
+        // unfiltered pop takes whatever is first
         let deadline = Instant::now() + Duration::from_millis(5);
-        assert_eq!(q.pop_matching(deadline, None).unwrap().tokens.len(), 60);
+        assert_eq!(q.pop_matching(deadline, |_| true).unwrap().tokens.len(), 60);
+    }
+
+    #[test]
+    fn pop_matching_keeps_batches_kind_homogeneous() {
+        let q = SharedQueue::new(8);
+        let (score, _ks) = req(6);
+        let (gen, _kg) = gen_req(6, 4);
+        q.try_push(score).unwrap();
+        q.try_push(gen).unwrap();
+        // a generate fill skips the score request at the head of the queue
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let got = q.pop_matching(deadline, |r| r.is_generate()).unwrap();
+        assert!(got.is_generate());
+        assert_eq!(got.total_len(), 10); // prompt 6 + max_new 4
+        // and a score fill never drains a generate request
+        let (gen2, _kg2) = gen_req(6, 4);
+        q.try_push(gen2).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let got = q.pop_matching(deadline, |r| !r.is_generate()).unwrap();
+        assert_eq!(got.kind, RequestKind::Score);
+    }
+
+    #[test]
+    fn generate_fill_respects_the_token_budget() {
+        // the worker's fill predicate: total_len must fit the remaining room
+        let q = SharedQueue::new(8);
+        let (big, _kb) = gen_req(20, 20); // total 40
+        let (small, _ks) = gen_req(4, 4); // total 8
+        q.try_push(big).unwrap();
+        q.try_push(small).unwrap();
+        let room = 10usize;
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let got = q
+            .pop_matching(deadline, |r| r.is_generate() && r.total_len() <= room)
+            .unwrap();
+        assert_eq!(got.total_len(), 8);
+        assert_eq!(q.depth(), 1); // the over-budget request stays queued
+    }
+
+    /// A scoring-only backend: `generator()` stays at the trait default.
+    struct ScoreOnly;
+
+    impl ScoreBackend for ScoreOnly {
+        fn batch(&self) -> usize {
+            2
+        }
+        fn seq(&self) -> usize {
+            16
+        }
+        fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            Ok(vec![0.0; tokens.len() - tokens.len() / 16])
+        }
+    }
+
+    #[test]
+    fn generate_on_a_scoring_only_backend_is_rejected_typed() {
+        let server = Server::spawn(|| Ok(ScoreOnly), ServerOpts::default());
+        let client = server.client();
+        let got = client.generate(vec![1, 2, 3], 4);
+        assert_eq!(got.unwrap_err(), ScoreError::NotGenerative);
+        let m = server.shutdown().unwrap();
+        assert_eq!(m.rejected_not_generative, 1);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.requests, 0);
     }
 }

@@ -1,4 +1,4 @@
-//! D-Rank CLI: train / compress / eval / serve / info.
+//! D-Rank CLI: train / compress / eval / serve / generate / info.
 //!
 //! ```text
 //! drank train    --model m --steps 400 [--lr 3e-3] [--scale 1.0]
@@ -9,6 +9,9 @@
 //! drank serve    --model m [--ratio 0.3] [--requests 200] [--clients 4]
 //!                [--workers 1] [--backend xla|ref] [--queue 256]
 //!                [--batch-window-ms 2] [--deadline-ms N]
+//! drank generate --model m [--ratio 0.3] [--prompt-len 16] [--max-new 32]
+//!                [--requests 8] [--temperature 0.0] [--seed 0]
+//!                [--workers 1] [--threads N]
 //! drank info
 //! ```
 //!
@@ -51,9 +54,10 @@ fn main() -> Result<()> {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
         "info" => cmd_info(),
         _ => {
-            println!("usage: drank <train|compress|eval|serve|info> [--flags]");
+            println!("usage: drank <train|compress|eval|serve|generate|info> [--flags]");
             Ok(())
         }
     }
@@ -342,6 +346,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
             wm.batches, wm.requests, wm.tokens, wm.busy_secs
         );
     }
+    Ok(())
+}
+
+/// `drank generate`: KV-cached autoregressive decoding through the serving
+/// coordinator on the reference backend (the compiled XLA graph has no
+/// decode path and would answer with the typed `NotGenerative` rejection).
+/// Prompts are drawn from the wiki2s test stream; `--ratio > 0` first
+/// compresses the model and decodes on the factors directly — every
+/// single-token projection runs as two skinny vec×mat products and the
+/// dense weights are never rematerialized.
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "m");
+    let weights = load_or_init(&model, true)?;
+    let cfg = weights.config;
+    let data = bundle_for(&weights, 1.0);
+    let ratio = args.f64_or("ratio", 0.0);
+    let prompt_len = args.usize_or("prompt-len", 16);
+    let max_new = args.usize_or("max-new", 32);
+    let n_requests = args.usize_or("requests", 8);
+    let temperature = args.f64_or("temperature", 0.0);
+    let seed = args.u64_or("seed", 0);
+    anyhow::ensure!(prompt_len >= 1, "--prompt-len must be at least 1");
+    anyhow::ensure!(
+        prompt_len + max_new <= cfg.seq,
+        "--prompt-len {prompt_len} + --max-new {max_new} exceeds seq {}",
+        cfg.seq
+    );
+
+    let served = if ratio > 0.0 {
+        let opts = parse_compress_opts(args)?;
+        let copts = CalibOpts::default();
+        let (m, _) = pipeline::compress_model_reference(
+            &weights, &data, &copts, &CompressOpts { ratio, ..opts },
+        )?;
+        println!(
+            "generating on the factors of a compressed model (ratio {:.2})",
+            m.achieved_ratio()
+        );
+        m
+    } else {
+        drank::model::lowrank::CompressedModel::dense_passthrough(weights)
+    };
+
+    let sopts = ServerOpts {
+        workers: args.usize_or("workers", 1),
+        queue: args.usize_or("queue", 256),
+        batch_window: args.duration_ms_or("batch-window-ms", 2),
+        threads: args.opt_usize("threads").unwrap_or(0),
+        ..Default::default()
+    };
+    let server = spawn_model_server(served, cfg.batch, cfg.seq, "ref", sopts)?;
+    let client = server.client();
+    let stream = data.domain(Domain::Wiki2s).test.clone();
+    let mut rng = drank::util::rng::Rng::new(seed);
+    for r in 0..n_requests {
+        let start = rng.below(stream.len() - prompt_len);
+        let prompt = stream[start..start + prompt_len].to_vec();
+        let resp = client
+            .generate_sampled(prompt, max_new, temperature, seed.wrapping_add(r as u64))
+            .map_err(|e| anyhow::anyhow!("generate request failed: {e}"))?;
+        println!(
+            "  request {r}: {} new tokens in {:.1} ms  {:?}",
+            resp.tokens.len(),
+            resp.latency_ms,
+            &resp.tokens[..resp.tokens.len().min(12)]
+        );
+    }
+    let m = server.shutdown()?;
+    println!(
+        "generated {} tokens over {} requests: {:.0} tokens/s decode, p50 {:.1} ms, \
+         p99 {:.1} ms",
+        m.generated_tokens,
+        m.requests,
+        m.decode_tps(),
+        m.p50_ms(),
+        m.p99_ms()
+    );
     Ok(())
 }
 

@@ -15,16 +15,32 @@
 //! the dense weight. Per-row floating-point order is independent of the
 //! band split, so all outputs are bit-identical for any thread count
 //! (enforced by `rust/tests/forward_equivalence.rs`).
+//!
+//! Generation runs through the same per-layer blocks on an explicit
+//! [`DecodeState`] (per-layer roped K/V caches + position counter), with
+//! two entry points sharing one code path:
+//!  - [`prefill`] — the batched pass above, now also *writing* the cache
+//!    for every prompt position (`Stage::Prefill`);
+//!  - [`decode_step`] — a serial single-token pass that reads the cache
+//!    through a cache-aware streaming-softmax variant and drives every
+//!    projection through the packed row-vector kernel
+//!    (`Linear::matvec` / `vecmat_f32_packed`, `Stage::Decode`).
+//! Every per-row op in decode replays the batched path's per-row FP order
+//! exactly (the kernels are row-local), so a decode step's logits are
+//! **bitwise identical** to the batched forward's logits at the same
+//! position — and trivially thread-invariant, since decode never spawns
+//! (enforced by `rust/tests/decode.rs`).
 
 use super::lowrank::{CompressedModel, Linear};
-use super::{ModelConfig, Weights};
-use crate::tensor::matmul::{gemm_f32_packed_serial, PackedMat};
+use super::{rope_tables, ModelConfig, RopeTables, Weights};
+use crate::tensor::matmul::{gemm_f32_packed_serial, vecmat_f32_packed, PackedMat};
 use crate::tensor::MatF;
 use crate::util::parallel::parallel_row_bands;
 use crate::util::profile::{self, Stage};
+use crate::util::rng::Rng;
+use std::sync::Arc;
 
 const EPS: f32 = 1e-5;
-const ROPE_THETA: f32 = 1e4;
 
 // Streaming-softmax attention tiles: TQ query rows share each loaded
 // key/value tile of TK rows. Sized so one (TQ·hd + 2·TK·hd) working set
@@ -174,7 +190,7 @@ pub fn accumulate_calib(
 ) {
     // the AOT calib artifact embeds the full [B, S] window (no next-token
     // trim), so statistics cover all `seq` positions — mirror that exactly
-    let _ = forward_hidden_obs(Params::Dense(w), tokens, batch, seq, seq, Some(sums));
+    let _ = forward_hidden_obs(Params::Dense(w), tokens, batch, seq, seq, Some(sums), None);
     sums.tokens += batch * seq;
 }
 
@@ -188,7 +204,7 @@ pub fn accumulate_calib_model(
     seq: usize,
     sums: &mut CalibSums,
 ) {
-    let _ = forward_hidden_obs(Params::Model(m), tokens, batch, seq, seq, Some(sums));
+    let _ = forward_hidden_obs(Params::Model(m), tokens, batch, seq, seq, Some(sums), None);
     sums.tokens += batch * seq;
 }
 
@@ -208,7 +224,7 @@ fn nll_impl(p: Params<'_>, tokens: &[i32], batch: usize, seq: usize) -> Vec<f32>
     let cfg = p.weights().config;
     let t = seq - 1;
     let rows = batch * t;
-    let hidden = forward_hidden_obs(p, tokens, batch, seq, t, None);
+    let hidden = forward_hidden_obs(p, tokens, batch, seq, t, None, None);
     // fused lm_head projection + cross entropy: each band thread projects
     // its rows in NLL_CHUNK-row chunks through the packed lm_head panels
     // into a small logits scratch and consumes it immediately, so the
@@ -250,11 +266,13 @@ pub fn forward_hidden(
     seq: usize,
     t: usize,
 ) -> Vec<f32> {
-    forward_hidden_obs(Params::Dense(w), tokens, batch, seq, t, None)
+    forward_hidden_obs(Params::Dense(w), tokens, batch, seq, t, None, None)
 }
 
 /// Forward with an optional calibration observer hooked on the inputs of
-/// every compressible projection.
+/// every compressible projection, and an optional [`DecodeState`] cache
+/// that prefill fills with every layer's roped K/V rows (cache implies
+/// `batch == 1` — one state per sequence).
 fn forward_hidden_obs(
     p: Params<'_>,
     tokens: &[i32],
@@ -262,6 +280,7 @@ fn forward_hidden_obs(
     seq: usize,
     t: usize,
     mut sums: Option<&mut CalibSums>,
+    mut cache: Option<&mut DecodeState>,
 ) -> Vec<f32> {
     let cfg = p.weights().config;
     let d = cfg.d;
@@ -274,9 +293,24 @@ fn forward_hidden_obs(
                 .copy_from_slice(&embed.data[tok * d..(tok + 1) * d]);
         }
     }
-    let (cos, sin) = rope_tables(t, cfg.head_dim());
+    // prefill indexes the state's capacity-length rope table: entries are a
+    // pure function of (position, lane), so it is bitwise identical to a
+    // t-length table over positions < t
+    let rope = match cache.as_deref() {
+        Some(st) => st.rope.clone(),
+        None => rope_tables(t, cfg.head_dim()),
+    };
     for l in 0..cfg.layers {
-        attention_block(p, &mut x, batch, t, l, &cos, &sin, sums.as_deref_mut());
+        attention_block(
+            p,
+            &mut x,
+            batch,
+            t,
+            l,
+            &rope,
+            sums.as_deref_mut(),
+            cache.as_deref_mut(),
+        );
         mlp_block(p, &mut x, batch, t, l, sums.as_deref_mut());
     }
     // final rmsnorm, row-parallel
@@ -325,24 +359,6 @@ fn residual_add(x: &mut [f32], o: &[f32], rows: usize, d: usize) {
             *xv += o[base + i];
         }
     });
-}
-
-fn rope_tables(t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
-    let half = hd / 2;
-    // the frequency depends only on the lane, not the position: compute the
-    // `half` powf calls once instead of t×half times
-    let freqs: Vec<f32> =
-        (0..half).map(|i| ROPE_THETA.powf(-(i as f32) / half as f32)).collect();
-    let mut cos = vec![0.0f32; t * half];
-    let mut sin = vec![0.0f32; t * half];
-    for p in 0..t {
-        for (i, &freq) in freqs.iter().enumerate() {
-            let ang = p as f32 * freq;
-            cos[p * half + i] = ang.cos();
-            sin[p * half + i] = ang.sin();
-        }
-    }
-    (cos, sin)
 }
 
 /// rotate-half rope on one head vector at position p.
@@ -462,9 +478,9 @@ fn attention_block(
     batch: usize,
     t: usize,
     l: usize,
-    cos: &[f32],
-    sin: &[f32],
+    rope: &RopeTables,
     mut sums: Option<&mut CalibSums>,
+    cache: Option<&mut DecodeState>,
 ) {
     let w = p.weights();
     let cfg = w.config;
@@ -488,7 +504,7 @@ fn attention_block(
         for (i, row) in band.chunks_exact_mut(d).enumerate() {
             let pos = (row0 + i) % t;
             for head in 0..h {
-                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, cos, sin);
+                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, &rope.cos, &rope.sin);
             }
         }
     });
@@ -496,10 +512,17 @@ fn attention_block(
         for (i, row) in band.chunks_exact_mut(kvd).enumerate() {
             let pos = (row0 + i) % t;
             for head in 0..kvh {
-                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, cos, sin);
+                apply_rope(&mut row[head * hd..(head + 1) * hd], pos, &rope.cos, &rope.sin);
             }
         }
     });
+    // prefill: persist this layer's roped keys and (unroped) values so
+    // decode can extend the sequence without recomputing the prefix
+    if let Some(st) = cache {
+        debug_assert_eq!(batch, 1, "a DecodeState caches exactly one sequence");
+        st.k[l][..t * kvd].copy_from_slice(&k);
+        st.v[l][..t * kvd].copy_from_slice(&v);
+    }
     // blocked streaming-softmax attention (flash-style): head-major units
     // fan out across threads, each unit runs key/value tiles with a running
     // max/denominator; then a deterministic transpose back to row-major.
@@ -560,6 +583,344 @@ fn mlp_block(
     }
     let o = p.linear("w_down", l).matmul(&g, rows);
     residual_add(x, &o, rows, d);
+}
+
+// ---------------------------------------------------------------------------
+// KV-cached generation: prefill / decode_step
+// ---------------------------------------------------------------------------
+
+/// Incremental generation state for ONE sequence: per-layer roped key and
+/// value caches plus the absolute position counter. [`prefill`] fills
+/// positions `0..prompt_len` in one batched pass; [`decode_step`] appends
+/// one position per call. Capacity is fixed at construction (prompt +
+/// max new tokens), and the rope table is fetched once from the
+/// process-global registry at that length — table entries depend only on
+/// (position, lane), so indexing the capacity-length table by absolute
+/// position is bitwise identical to any shorter table.
+pub struct DecodeState {
+    /// per-layer roped keys, each `capacity × kvd`, valid below `pos`
+    k: Vec<Vec<f32>>,
+    /// per-layer values, same layout
+    v: Vec<Vec<f32>>,
+    pos: usize,
+    cap: usize,
+    rope: Arc<RopeTables>,
+}
+
+impl DecodeState {
+    /// Allocate caches for up to `capacity` total positions (prompt +
+    /// generated) of a model shaped by `cfg`.
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> Self {
+        let kvd = cfg.kvd();
+        DecodeState {
+            k: (0..cfg.layers).map(|_| vec![0.0f32; capacity * kvd]).collect(),
+            v: (0..cfg.layers).map(|_| vec![0.0f32; capacity * kvd]).collect(),
+            pos: 0,
+            cap: capacity,
+            rope: rope_tables(capacity, cfg.head_dim()),
+        }
+    }
+
+    /// Positions filled so far (prompt + decoded tokens).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Total positions the caches can hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Run the batched forward over a prompt, writing every layer's roped K/V
+/// rows into `state`, and return the logits predicting the token after the
+/// prompt (`[vocab]`). This IS the scoring forward — same blocks, same
+/// kernels, same row-band parallelism (and therefore the same bit-identity
+/// across thread counts) — plus the cache writes; timed under
+/// `Stage::Prefill`.
+pub fn prefill(w: &Weights, prompt: &[i32], state: &mut DecodeState) -> Vec<f32> {
+    prefill_impl(Params::Dense(w), prompt, state)
+}
+
+/// [`prefill`] over a compressed model: factored sites run on their
+/// factors, dense weights are never rematerialized.
+pub fn prefill_model(m: &CompressedModel, prompt: &[i32], state: &mut DecodeState) -> Vec<f32> {
+    prefill_impl(Params::Model(m), prompt, state)
+}
+
+fn prefill_impl(p: Params<'_>, prompt: &[i32], state: &mut DecodeState) -> Vec<f32> {
+    let cfg = p.weights().config;
+    let t = prompt.len();
+    assert!(t >= 1, "prefill needs a non-empty prompt");
+    assert_eq!(state.pos, 0, "prefill requires a fresh DecodeState");
+    assert!(t <= state.cap, "prompt ({t}) exceeds DecodeState capacity ({})", state.cap);
+    profile::time(Stage::Prefill, || {
+        let hidden = forward_hidden_obs(p, prompt, 1, t, t, None, Some(state));
+        state.pos = t;
+        let d = cfg.d;
+        let mut logits = vec![0.0f32; cfg.vocab];
+        vecmat_f32_packed(&hidden[(t - 1) * d..t * d], p.lm_packed(), &mut logits);
+        logits
+    })
+}
+
+/// One cached decode step: feed the next `token`, append its roped K/V to
+/// every layer's cache, and return the logits predicting the following
+/// token (`[vocab]`); timed under `Stage::Decode`.
+///
+/// The entire step is serial — one token is far too little work to spawn
+/// for — and every op replays the batched path's per-row FP order exactly
+/// (projections via the packed vecmat kernel, attention via the same
+/// key-tile schedule the streaming kernel uses for the last query row), so
+/// the logits are **bitwise identical** to what a full batched forward
+/// over the extended prefix would produce at this position, and trivially
+/// `to_bits`-identical across thread counts.
+pub fn decode_step(w: &Weights, token: i32, state: &mut DecodeState) -> Vec<f32> {
+    decode_impl(Params::Dense(w), token, state)
+}
+
+/// [`decode_step`] over a compressed model (factored sites run `(x·B)·C`
+/// as two packed vecmats through the shared scratch).
+pub fn decode_step_model(m: &CompressedModel, token: i32, state: &mut DecodeState) -> Vec<f32> {
+    decode_impl(Params::Model(m), token, state)
+}
+
+fn decode_impl(p: Params<'_>, token: i32, state: &mut DecodeState) -> Vec<f32> {
+    let w = p.weights();
+    let cfg = w.config;
+    assert!(state.pos < state.cap, "DecodeState is full (capacity {})", state.cap);
+    profile::time(Stage::Decode, || {
+        let d = cfg.d;
+        let tok = token as usize;
+        let embed = w.by_name("embed");
+        let mut x = embed.data[tok * d..(tok + 1) * d].to_vec();
+        for l in 0..cfg.layers {
+            attention_decode_block(p, &mut x, l, state);
+            mlp_decode_block(p, &mut x, l);
+        }
+        rmsnorm_inplace(&mut x, &w.by_name("final_norm").data);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        vecmat_f32_packed(&x, p.lm_packed(), &mut logits);
+        state.pos += 1;
+        logits
+    })
+}
+
+/// Cache-aware variant of [`attention_streaming`] for a single query row at
+/// position `t_keys - 1`: the same [`ATTN_TK`] key-tile schedule, running
+/// max/denominator, and rescale-on-new-max — for the last row of a batched
+/// pass the two kernels execute the identical FP op sequence, which is what
+/// makes decode bitwise-equal to prefill. Serial by design (decode's
+/// thread-invariance falls out of having no spawns at all).
+#[allow(clippy::too_many_arguments)]
+fn attention_decode(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t_keys: usize,
+    kvd: usize,
+    h: usize,
+    rep: usize,
+    hd: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let mut scores = [0.0f32; ATTN_TK];
+    for head in 0..h {
+        let kv_head = head / rep;
+        let qv = &q[head * hd..(head + 1) * hd];
+        let acc = &mut out[head * hd..(head + 1) * hd];
+        acc.fill(0.0);
+        let mut m = f32::MIN; // running max
+        let mut lsum = 0.0f32; // running denominator
+        for k0 in (0..t_keys).step_by(ATTN_TK) {
+            let kend = (k0 + ATTN_TK).min(t_keys);
+            let mut tmax = f32::MIN;
+            for j in k0..kend {
+                let kv = &kc[j * kvd + kv_head * hd..][..hd];
+                let s = qv.iter().zip(kv).map(|(a, b)| a * b).sum::<f32>() * scale;
+                scores[j - k0] = s;
+                tmax = tmax.max(s);
+            }
+            if tmax > m {
+                if lsum > 0.0 {
+                    let corr = (m - tmax).exp();
+                    for a in acc.iter_mut() {
+                        *a *= corr;
+                    }
+                    lsum *= corr;
+                }
+                m = tmax;
+            }
+            for j in k0..kend {
+                let pj = (scores[j - k0] - m).exp();
+                lsum += pj;
+                let vv = &vc[j * kvd + kv_head * hd..][..hd];
+                for (a, &vx) in acc.iter_mut().zip(vv) {
+                    *a += pj * vx;
+                }
+            }
+        }
+        let inv = 1.0 / lsum;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+}
+
+/// Single-token twin of [`attention_block`]: rmsnorm → q/k/v vecmats →
+/// rope at the absolute position → cache append → cached streaming
+/// attention → output vecmat → residual.
+fn attention_decode_block(p: Params<'_>, x: &mut [f32], l: usize, state: &mut DecodeState) {
+    let w = p.weights();
+    let cfg = w.config;
+    let (d, h, kvh, hd) = (cfg.d, cfg.heads, cfg.kv_heads, cfg.head_dim());
+    let kvd = cfg.kvd();
+    let an = &w.by_name("attn_norm").data[l * d..(l + 1) * d];
+    let rep = h / kvh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let pos = state.pos;
+
+    let mut xn = vec![0.0f32; d];
+    rmsnorm(x, an, &mut xn);
+    let mut q = vec![0.0f32; d];
+    let mut k = vec![0.0f32; kvd];
+    let mut v = vec![0.0f32; kvd];
+    p.linear("wq", l).matvec(&xn, &mut q);
+    p.linear("wk", l).matvec(&xn, &mut k);
+    p.linear("wv", l).matvec(&xn, &mut v);
+    for head in 0..h {
+        apply_rope(&mut q[head * hd..(head + 1) * hd], pos, &state.rope.cos, &state.rope.sin);
+    }
+    for head in 0..kvh {
+        apply_rope(&mut k[head * hd..(head + 1) * hd], pos, &state.rope.cos, &state.rope.sin);
+    }
+    state.k[l][pos * kvd..(pos + 1) * kvd].copy_from_slice(&k);
+    state.v[l][pos * kvd..(pos + 1) * kvd].copy_from_slice(&v);
+
+    let mut attn = vec![0.0f32; d];
+    profile::time(Stage::Attn, || {
+        attention_decode(
+            &q,
+            &state.k[l],
+            &state.v[l],
+            pos + 1,
+            kvd,
+            h,
+            rep,
+            hd,
+            scale,
+            &mut attn,
+        );
+    });
+    let mut o = vec![0.0f32; d];
+    p.linear("wo", l).matvec(&attn, &mut o);
+    for (xv, ov) in x.iter_mut().zip(&o) {
+        *xv += ov;
+    }
+}
+
+/// Single-token twin of [`mlp_block`].
+fn mlp_decode_block(p: Params<'_>, x: &mut [f32], l: usize) {
+    let w = p.weights();
+    let cfg = w.config;
+    let (d, dff) = (cfg.d, cfg.dff);
+    let mn = &w.by_name("mlp_norm").data[l * d..(l + 1) * d];
+
+    let mut xn = vec![0.0f32; d];
+    rmsnorm(x, mn, &mut xn);
+    let mut g = vec![0.0f32; dff];
+    let mut u = vec![0.0f32; dff];
+    p.linear("w_gate", l).matvec(&xn, &mut g);
+    p.linear("w_up", l).matvec(&xn, &mut u);
+    for (gv, &uv) in g.iter_mut().zip(&u) {
+        let s = *gv / (1.0 + (-*gv).exp());
+        *gv = s * uv;
+    }
+    let mut o = vec![0.0f32; d];
+    p.linear("w_down", l).matvec(&g, &mut o);
+    for (xv, ov) in x.iter_mut().zip(&o) {
+        *xv += ov;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampling + the generation loop
+// ---------------------------------------------------------------------------
+
+/// Greedy argmax over logits; ties break toward the lowest token id, so
+/// greedy decoding is fully deterministic.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Draw one token from softmax(logits / temperature) using the caller's
+/// seeded [`Rng`] (`categorical` over f64 weights, max-subtracted for
+/// stability) — deterministic for a given (seed, logits) stream.
+pub fn sample_temperature(logits: &[f32], temperature: f64, rng: &mut Rng) -> i32 {
+    assert!(temperature > 0.0, "temperature sampling needs temperature > 0");
+    let max = logits.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let weights: Vec<f64> =
+        logits.iter().map(|&l| ((l as f64 - max) / temperature).exp()).collect();
+    rng.categorical(&weights) as i32
+}
+
+/// Options for autoregressive generation. `temperature == 0.0` selects
+/// greedy decoding; any positive temperature samples from the softmax with
+/// a deterministic `util::rng` stream seeded by `seed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenerateOpts {
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for GenerateOpts {
+    fn default() -> Self {
+        GenerateOpts { max_new_tokens: 16, temperature: 0.0, seed: 0 }
+    }
+}
+
+/// Autoregressive generation: one [`prefill`] over the prompt, then one
+/// [`decode_step`] per emitted token, sampling per [`GenerateOpts`].
+/// Returns the generated token ids (never the prompt).
+pub fn generate(w: &Weights, prompt: &[i32], opts: &GenerateOpts) -> Vec<i32> {
+    generate_impl(Params::Dense(w), prompt, opts)
+}
+
+/// [`generate`] over a compressed model, on its factors.
+pub fn generate_model(m: &CompressedModel, prompt: &[i32], opts: &GenerateOpts) -> Vec<i32> {
+    generate_impl(Params::Model(m), prompt, opts)
+}
+
+fn generate_impl(p: Params<'_>, prompt: &[i32], opts: &GenerateOpts) -> Vec<i32> {
+    let cfg = p.weights().config;
+    if opts.max_new_tokens == 0 {
+        return Vec::new();
+    }
+    let mut state = DecodeState::new(&cfg, prompt.len() + opts.max_new_tokens);
+    let mut rng = Rng::new(opts.seed);
+    let mut logits = prefill_impl(p, prompt, &mut state);
+    let mut out = Vec::with_capacity(opts.max_new_tokens);
+    loop {
+        let tok = if opts.temperature > 0.0 {
+            sample_temperature(&logits, opts.temperature, &mut rng)
+        } else {
+            argmax(&logits)
+        };
+        out.push(tok);
+        if out.len() == opts.max_new_tokens {
+            // the last token's logits would go unused — skip the step
+            return out;
+        }
+        logits = decode_impl(p, tok, &mut state);
+    }
 }
 
 #[cfg(test)]
@@ -636,6 +997,94 @@ mod tests {
         let toks: Vec<i32> = (0..b * s).map(|_| r.below(cfg.vocab) as i32).collect();
         let out = nll(&w, &toks, b, s);
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_logits_are_bitwise_equal_to_prefill_logits() {
+        // the central numeric contract of the decode path: a decode step at
+        // absolute position p produces the very same bits as a fresh
+        // batched prefill over the (p+1)-token prefix
+        let (w, toks, _b, _s) = setup();
+        let (start, total) = (8usize, 13usize);
+        let mut st = DecodeState::new(&w.config, total);
+        let mut got = prefill(&w, &toks[..start], &mut st);
+        assert_eq!(st.pos(), start);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        for p in start..total {
+            let mut fresh = DecodeState::new(&w.config, p);
+            let want = prefill(&w, &toks[..p], &mut fresh);
+            assert_eq!(bits(&got), bits(&want), "position {}", p - 1);
+            got = decode_step(&w, toks[p], &mut st);
+        }
+        assert_eq!(st.pos(), total);
+    }
+
+    #[test]
+    fn decode_matches_prefill_on_gqa() {
+        let cfg = ModelConfig::by_name("gqa").unwrap();
+        let w = Weights::init(cfg, 4);
+        let mut r = Rng::new(6);
+        let total = 9usize;
+        let toks: Vec<i32> = (0..total).map(|_| r.below(cfg.vocab) as i32).collect();
+        let mut st = DecodeState::new(&cfg, total);
+        let mut got = prefill(&w, &toks[..4], &mut st);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        for p in 4..total {
+            let mut fresh = DecodeState::new(&cfg, p);
+            let want = prefill(&w, &toks[..p], &mut fresh);
+            assert_eq!(bits(&got), bits(&want), "gqa position {}", p - 1);
+            got = decode_step(&w, toks[p], &mut st);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_greedy_matches_manual_loop() {
+        let (w, toks, _b, _s) = setup();
+        let prompt = &toks[..6];
+        let opts = GenerateOpts { max_new_tokens: 5, temperature: 0.0, seed: 0 };
+        let out = generate(&w, prompt, &opts);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out, generate(&w, prompt, &opts), "greedy must be deterministic");
+        // manual prefill + decode loop reproduces the same tokens
+        let mut st = DecodeState::new(&w.config, prompt.len() + 5);
+        let mut logits = prefill(&w, prompt, &mut st);
+        let mut manual = Vec::new();
+        for _ in 0..5 {
+            let tok = argmax(&logits);
+            manual.push(tok);
+            if manual.len() < 5 {
+                logits = decode_step(&w, tok, &mut st);
+            }
+        }
+        assert_eq!(out, manual);
+        // all ids must be valid vocab entries
+        assert!(out.iter().all(|&t| (t as usize) < w.config.vocab));
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let (w, toks, _b, _s) = setup();
+        let prompt = &toks[..6];
+        let hot = GenerateOpts { max_new_tokens: 8, temperature: 1.0, seed: 42 };
+        let a = generate(&w, prompt, &hot);
+        let b = generate(&w, prompt, &hot);
+        assert_eq!(a, b, "same seed must reproduce the same tokens");
+        assert!(a.iter().all(|&t| (t as usize) < w.config.vocab));
+        let other = GenerateOpts { seed: 43, ..hot };
+        let c = generate(&w, prompt, &other);
+        // different seeds will almost surely diverge somewhere in 8 draws
+        // from a near-uniform distribution; equal streams would indicate
+        // the seed is ignored
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn generate_model_passthrough_matches_dense_generate() {
+        let (w, toks, _b, _s) = setup();
+        let m = CompressedModel::dense_passthrough(w.clone());
+        let prompt = &toks[..6];
+        let opts = GenerateOpts { max_new_tokens: 6, temperature: 0.0, seed: 0 };
+        assert_eq!(generate(&w, prompt, &opts), generate_model(&m, prompt, &opts));
     }
 
     #[test]

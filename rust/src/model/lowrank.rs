@@ -23,7 +23,10 @@ use std::sync::OnceLock;
 
 use super::{ModelConfig, Weights, COMPRESSIBLE};
 use crate::tensor::{
-    matmul::{gemm_f32, gemm_f32_packed, gemm_f32_packed_into, matmul_f32, PackedMat},
+    matmul::{
+        gemm_f32, gemm_f32_packed, gemm_f32_packed_into, matmul_f32, vecmat_f32_packed,
+        PackedMat,
+    },
     Mat32,
 };
 use crate::util::profile::{self, Stage};
@@ -126,6 +129,59 @@ impl Linear<'_> {
                 None => {
                     let mid = gemm_f32(x, rows, b.rows, &b.data, b.cols);
                     gemm_f32(&mid, rows, c.rows, &c.data, c.cols)
+                }
+            }),
+        }
+    }
+
+    /// y = x·W for a single activation row — the decode hot path, where
+    /// every projection sees exactly one token. `y` is overwritten (may be
+    /// dirty). Same dispatch and pack slots as [`Linear::matmul`] but
+    /// through the serial packed vecmat kernel
+    /// (`tensor::matmul::vecmat_f32_packed`): never re-packs a site a
+    /// forward pass already packed, does no spawns (trivially
+    /// thread-invariant), and the factored form fuses `(x·B)·C` through the
+    /// same per-thread scratch as the batched path. Byte-identical to
+    /// `matmul(x, 1)` — prefill and decode agree bitwise row for row.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Linear::Dense { w, d1, d2, pack } => profile::time(Stage::Fwd, || {
+                assert_eq!(x.len(), *d1, "matvec input dim mismatch");
+                assert_eq!(y.len(), *d2, "matvec output dim mismatch");
+                match pack {
+                    Some(slot) => {
+                        let bp = slot.get_or_init(|| PackedMat::pack(w, *d1, *d2));
+                        vecmat_f32_packed(x, bp, y);
+                    }
+                    None => {
+                        // unpacked fallback: plain ascending k, the same
+                        // per-element order as the packed kernel
+                        y.fill(0.0);
+                        for (kk, &xv) in x.iter().enumerate() {
+                            let wrow = &w[kk * *d2..(kk + 1) * *d2];
+                            for (o, &wv) in y.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }),
+            Linear::Factored { b, c, pack } => profile::time(Stage::FwdLowrank, || {
+                assert_eq!(x.len(), b.rows, "matvec input dim mismatch");
+                assert_eq!(y.len(), c.cols, "matvec output dim mismatch");
+                match pack {
+                    Some((bslot, cslot)) => {
+                        let bp = bslot.get_or_init(|| PackedMat::pack(&b.data, b.rows, b.cols));
+                        let cp = cslot.get_or_init(|| PackedMat::pack(&c.data, c.rows, c.cols));
+                        with_mid_scratch(b.cols, |mid| {
+                            vecmat_f32_packed(x, bp, mid);
+                            vecmat_f32_packed(mid, cp, y);
+                        });
+                    }
+                    None => {
+                        let mid = gemm_f32(x, 1, b.rows, &b.data, b.cols);
+                        y.copy_from_slice(&gemm_f32(&mid, 1, c.rows, &c.data, c.cols));
+                    }
                 }
             }),
         }
@@ -477,6 +533,38 @@ mod tests {
         for (f, d) in factored.iter().zip(&dense) {
             assert!((f - d).abs() < 1e-4, "{f} vs {d}");
         }
+    }
+
+    #[test]
+    fn matvec_is_byte_identical_to_one_row_matmul() {
+        // the decode kernel must agree bitwise with the batched path on the
+        // same row, for both representations, packed and unpacked
+        let (d1, k, d2) = (33usize, 6usize, 40usize);
+        let b = Mat32::from_vec(d1, k, (0..d1 * k).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect());
+        let c = Mat32::from_vec(k, d2, (0..k * d2).map(|i| ((i % 7) as f32 - 3.0) * 0.03).collect());
+        let x: Vec<f32> = (0..d1).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let fslot = (OnceLock::new(), OnceLock::new());
+        let fac = Linear::Factored { b: &b, c: &c, pack: Some((&fslot.0, &fslot.1)) };
+        let want = fac.matmul(&x, 1);
+        let mut got = vec![f32::NAN; d2];
+        fac.matvec(&x, &mut got);
+        assert_eq!(bits(&got), bits(&want), "factored matvec != 1-row matmul");
+        let mut unpacked = vec![f32::NAN; d2];
+        Linear::Factored { b: &b, c: &c, pack: None }.matvec(&x, &mut unpacked);
+        assert_eq!(bits(&unpacked), bits(&want), "unpacked factored matvec");
+
+        let w = matmul_f32(&b, &c);
+        let dslot = OnceLock::new();
+        let den = Linear::Dense { w: &w.data, d1, d2, pack: Some(&dslot) };
+        let dwant = den.matmul(&x, 1);
+        let mut dgot = vec![f32::NAN; d2];
+        den.matvec(&x, &mut dgot);
+        assert_eq!(bits(&dgot), bits(&dwant), "dense matvec != 1-row matmul");
+        let mut dplain = vec![f32::NAN; d2];
+        Linear::Dense { w: &w.data, d1, d2, pack: None }.matvec(&x, &mut dplain);
+        assert_eq!(bits(&dplain), bits(&dwant), "unpacked dense matvec");
     }
 
     #[test]

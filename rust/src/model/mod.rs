@@ -21,7 +21,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::tensor::matmul::PackedMat;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use std::sync::OnceLock;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Canonical parameter names, in artifact wire order.
 pub const PARAM_NAMES: [&str; 12] = [
@@ -179,6 +180,79 @@ impl Tensor {
     }
 }
 
+/// Rope base frequency (shared by the batched forward, the decode path,
+/// and the scalar test oracles).
+pub const ROPE_THETA: f32 = 1e4;
+
+/// Precomputed rotary-embedding tables for `t` positions at one head_dim:
+/// entry `[p·half + i]` is cos/sin of `p · θ^(−i/half)`. Entries depend
+/// only on the position `p` and lane `i` — never on `t` — so tables of
+/// different lengths agree bitwise on their shared prefix; decode indexes a
+/// capacity-length table by absolute position and matches prefill exactly.
+#[derive(Debug)]
+pub struct RopeTables {
+    /// head_dim / 2 — the per-position stride of `cos`/`sin`.
+    pub half: usize,
+    pub cos: Vec<f32>,
+    pub sin: Vec<f32>,
+}
+
+impl RopeTables {
+    fn build(t: usize, head_dim: usize) -> Self {
+        let half = head_dim / 2;
+        // the frequency depends only on the lane, not the position: compute
+        // the `half` powf calls once instead of t×half times
+        let freqs: Vec<f32> =
+            (0..half).map(|i| ROPE_THETA.powf(-(i as f32) / half as f32)).collect();
+        let mut cos = vec![0.0f32; t * half];
+        let mut sin = vec![0.0f32; t * half];
+        for p in 0..t {
+            for (i, &freq) in freqs.iter().enumerate() {
+                let ang = p as f32 * freq;
+                cos[p * half + i] = ang.cos();
+                sin[p * half + i] = ang.sin();
+            }
+        }
+        RopeTables { half, cos, sin }
+    }
+
+    /// Number of positions this table covers.
+    pub fn positions(&self) -> usize {
+        if self.half == 0 { 0 } else { self.cos.len() / self.half }
+    }
+}
+
+fn rope_registry() -> &'static Mutex<HashMap<(usize, usize), Arc<RopeTables>>> {
+    static REG: OnceLock<Mutex<HashMap<(usize, usize), Arc<RopeTables>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Memoized rope tables, keyed by `(t, head_dim)` in a process-global
+/// registry — built once per shape instead of on every forward call (decode
+/// would otherwise rebuild them for every emitted token). The tables are
+/// pure functions of their key, so sharing across models and workers is
+/// always sound; callers hold an `Arc` so [`reset_rope_tables`] never
+/// invalidates a table in use.
+pub fn rope_tables(t: usize, head_dim: usize) -> Arc<RopeTables> {
+    let mut reg = rope_registry().lock().unwrap();
+    reg.entry((t, head_dim))
+        .or_insert_with(|| Arc::new(RopeTables::build(t, head_dim)))
+        .clone()
+}
+
+/// Drop every memoized rope table. Called alongside [`Weights::reset_packs`]
+/// so the two serving caches reset together; purely a memory release —
+/// tables are deterministic functions of their key, so a rebuilt table is
+/// bitwise identical to the dropped one.
+pub fn reset_rope_tables() {
+    rope_registry().lock().unwrap().clear();
+}
+
+/// Test probe: number of distinct `(t, head_dim)` tables currently cached.
+pub fn rope_tables_cached() -> usize {
+    rope_registry().lock().unwrap().len()
+}
+
 /// Lazily-packed GEMM panels for every dense projection site of a model:
 /// one slot per (compressible type, layer) plus one for `lm_head`. Weights
 /// are reused across every batch, so the serving forward packs each slab
@@ -266,10 +340,12 @@ impl Weights {
         Self { config, tensors, packs: PackRegistry::new(&config) }
     }
 
-    /// Drop all cached GEMM panels. Call after mutating `tensors` in place
-    /// on a model that may already have served a forward pass.
+    /// Drop all cached GEMM panels (and the process-global rope tables,
+    /// which reset alongside the packs). Call after mutating `tensors` in
+    /// place on a model that may already have served a forward pass.
     pub fn reset_packs(&mut self) {
         self.packs = PackRegistry::new(&self.config);
+        reset_rope_tables();
     }
 
     pub fn by_name(&self, name: &str) -> &Tensor {
@@ -442,6 +518,44 @@ mod tests {
         t.set_layer_mat(1, &m);
         assert_eq!(t.layer_mat(1).data, m.data);
         assert!(t.layer_mat(0).data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rope_registry_memoizes_by_shape_and_prefixes_agree() {
+        // same key -> the same Arc (no rebuild); the registry is process-
+        // global and other tests may insert concurrently, so assert only on
+        // our own keys, never on the global count.
+        let a = rope_tables(48, 16);
+        let b = rope_tables(48, 16);
+        assert!(Arc::ptr_eq(&a, &b), "same (t, head_dim) must share one table");
+        assert_eq!(a.half, 8);
+        assert_eq!(a.positions(), 48);
+        // entries depend only on (position, lane): a longer table agrees
+        // bitwise with a shorter one over the shared positions — this is
+        // what lets decode index a capacity-length table by absolute
+        // position and still match prefill exactly.
+        let long = rope_tables(96, 16);
+        assert_eq!(&long.cos[..a.cos.len()], &a.cos[..]);
+        assert_eq!(&long.sin[..a.sin.len()], &a.sin[..]);
+        // reset drops cached entries; a rebuilt table is bitwise identical
+        // (held Arcs stay valid across the reset)
+        reset_rope_tables();
+        let c = rope_tables(48, 16);
+        assert!(!Arc::ptr_eq(&a, &c), "reset must drop the cached entry");
+        assert_eq!(a.cos, c.cos);
+        assert_eq!(a.sin, c.sin);
+    }
+
+    #[test]
+    fn reset_packs_also_resets_rope_registry() {
+        let cfg = ModelConfig::by_name("tiny").unwrap();
+        let mut w = Weights::init(cfg, 9);
+        let before = rope_tables(31, cfg.head_dim());
+        w.reset_packs();
+        let after = rope_tables(31, cfg.head_dim());
+        assert!(!Arc::ptr_eq(&before, &after), "reset_packs must clear rope tables");
+        assert_eq!(before.cos, after.cos);
+        assert_eq!(w.packs.packed_sites(), 0);
     }
 
     #[test]

@@ -246,6 +246,39 @@ pub fn gemm_f32_packed_serial(a: &[f32], m: usize, k: usize, bp: &PackedMat, c: 
     f32_band_packed(a, k, bp, 0, c);
 }
 
+/// y = x · Bp for a single row-vector `x` against a pre-packed RHS — the
+/// decode hot path, where every projection sees exactly one token. `y` is
+/// overwritten (may be dirty). Each output element accumulates with plain
+/// ascending k, which is exactly the per-element order of
+/// [`gemm_f32_packed`] (its k-block loop only tiles the same ascending
+/// walk), so the result is **byte-identical** to a 1-row packed GEMM —
+/// prefill (batched GEMM) and decode (this kernel) agree bitwise on the
+/// same inputs. Serial by design: one row is far too little work to
+/// amortize a band spawn, and callers may already sit inside a parallel
+/// region.
+pub fn vecmat_f32_packed(x: &[f32], bp: &PackedMat, y: &mut [f32]) {
+    assert_eq!(x.len(), bp.rows, "vecmat lhs shape mismatch");
+    assert_eq!(y.len(), bp.cols, "vecmat out shape mismatch");
+    let n = bp.cols;
+    if n == 0 {
+        return;
+    }
+    let np = n.div_ceil(PANEL);
+    for jp in 0..np {
+        let j0 = jp * PANEL;
+        let w = PANEL.min(n - j0);
+        let panel = bp.panel(jp);
+        let mut acc = [0.0f32; PANEL];
+        for (kk, &xv) in x.iter().enumerate() {
+            let prow = &panel[kk * PANEL..kk * PANEL + w];
+            for (c, &pv) in acc[..w].iter_mut().zip(prow) {
+                *c += xv * pv;
+            }
+        }
+        y[j0..j0 + w].copy_from_slice(&acc[..w]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,6 +413,22 @@ mod tests {
         let _p = PackedMat::pack(&b, 2, 3);
         let _q = PackedMat::pack(&b, 3, 2);
         assert!(pack_ops() >= before + 2);
+    }
+
+    #[test]
+    fn packed_vecmat_is_byte_identical_to_one_row_packed_gemm() {
+        let mut rng = Rng::new(13);
+        // ragged panels and contraction lengths, plus the degenerate edges
+        for &(k, n) in &[(1, 1), (5, 7), (64, 64), (64, 65), (130, 33), (70, 129), (200, 256)] {
+            let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let bp = PackedMat::pack(&b, k, n);
+            let want = gemm_f32_packed(&x, 1, k, &bp);
+            let mut got = vec![f32::NAN; n]; // dirty buffer must be overwritten
+            vecmat_f32_packed(&x, &bp, &mut got);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "vecmat != 1-row gemm at ({k},{n})");
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Per-stage timing for the compression engine and the serving forward.
 //!
-//! Ten stages cover the hot path end to end: calibration forward passes,
+//! Twelve stages cover the hot path end to end: calibration forward passes,
 //! Gram formation (calib Gram accumulation + the A·Aᵀ / AᵀA products inside
 //! `svd`), whitening (Cholesky of the Gram), the Jacobi eigensolve — split
 //! into its sweep loop (`eigen_sweep`, the blocked-parallel part) and the
@@ -9,11 +9,16 @@
 //! truncation (factor extraction, including the unwhitening solve), dense
 //! reconstruction, the two serving-forward GEMM stages: `fwd` (dense
 //! y = x·W projections) and `fwd_lowrank` (factored y = (x·B)·C
-//! projections), and `attn` — the blocked streaming-softmax attention
-//! kernel, the serving forward's non-GEMM hot loop. The split lets the
+//! projections), `attn` — the blocked streaming-softmax attention
+//! kernel, the serving forward's non-GEMM hot loop — and the two
+//! generation stages: `prefill` (the batched cache-writing pass over the
+//! prompt) and `decode` (the single-token cached step, one call per
+//! emitted token). The split lets the
 //! coordinator tests assert that factored serving never reconstructs
 //! (`reconstruct` calls stay flat while `fwd_lowrank` climbs), and the
-//! `attn_tiny` bench row regression-gate the attention rewrite. Counters
+//! `attn_tiny` bench row regression-gate the attention rewrite. Note the
+//! generation stage names deliberately avoid the `fwd`/`eigen` prefixes so
+//! `fwd_ms()`/`eigen_ms()` keep their historical meanings. Counters
 //! are process-global atomics so they can be
 //! bumped from worker threads without plumbing a handle through every call;
 //! `cpu_ms` therefore sums time across threads (it can exceed wall time —
@@ -42,17 +47,19 @@ pub enum Stage {
     Fwd = 7,
     FwdLowrank = 8,
     Attn = 9,
+    Prefill = 10,
+    Decode = 11,
 }
 
-pub const STAGE_NAMES: [&str; 10] = [
+pub const STAGE_NAMES: [&str; 12] = [
     "calib", "gram", "whiten", "eigen_sweep", "eigen_sort", "truncate", "reconstruct",
-    "fwd", "fwd_lowrank", "attn",
+    "fwd", "fwd_lowrank", "attn", "prefill", "decode",
 ];
 
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
-static NANOS: [AtomicU64; 10] = [ZERO; 10];
-static CALLS: [AtomicU64; 10] = [ZERO; 10];
+static NANOS: [AtomicU64; 12] = [ZERO; 12];
+static CALLS: [AtomicU64; 12] = [ZERO; 12];
 
 /// Zero all stage counters (call before a profiled run).
 pub fn reset() {
@@ -231,11 +238,40 @@ mod tests {
         assert!(j.get("threads").and_then(|v| v.as_usize()).unwrap() >= 1);
         assert_eq!(j.get("wall_ms").and_then(|v| v.as_f64()), Some(2.5));
         let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
-        assert_eq!(stages.len(), 10);
+        assert_eq!(stages.len(), 12);
         assert_eq!(stages[0].get("name").and_then(|v| v.as_str()), Some("calib"));
         assert_eq!(stages[7].get("name").and_then(|v| v.as_str()), Some("fwd"));
         assert_eq!(stages[8].get("name").and_then(|v| v.as_str()), Some("fwd_lowrank"));
         assert_eq!(stages[9].get("name").and_then(|v| v.as_str()), Some("attn"));
+        assert_eq!(stages[10].get("name").and_then(|v| v.as_str()), Some("prefill"));
+        assert_eq!(stages[11].get("name").and_then(|v| v.as_str()), Some("decode"));
+    }
+
+    #[test]
+    fn generation_stages_count_and_stay_out_of_fwd_ms() {
+        let _g = LOCK.lock().unwrap();
+        let before = snapshot(0.0);
+        time(Stage::Prefill, || std::hint::black_box(1 + 1));
+        time(Stage::Decode, || std::hint::black_box(2 + 2));
+        let after = snapshot(0.0);
+        let calls = |p: &CompressProfile, name: &str| {
+            p.stages.iter().find(|s| s.name == name).unwrap().calls
+        };
+        assert!(calls(&after, "prefill") >= calls(&before, "prefill") + 1);
+        assert!(calls(&after, "decode") >= calls(&before, "decode") + 1);
+        // prefill/decode must not leak into the historical fwd/eigen sums.
+        let only_gen = CompressProfile {
+            threads: 1,
+            wall_ms: 0.0,
+            stages: vec![
+                StageTiming { name: "prefill", cpu_ms: 3.0, calls: 1 },
+                StageTiming { name: "decode", cpu_ms: 7.0, calls: 4 },
+            ],
+        };
+        assert_eq!(only_gen.fwd_ms(), 0.0);
+        assert_eq!(only_gen.eigen_ms(), 0.0);
+        assert_eq!(only_gen.stage_ms("prefill"), 3.0);
+        assert_eq!(only_gen.stage_ms("decode"), 7.0);
     }
 
     #[test]

@@ -344,6 +344,27 @@ fn batched_forward_matches_scalar_oracle_on_gqa_long_sequences() {
     }
 }
 
+#[test]
+fn attention_shape_edges_match_scalar_oracle() {
+    // the streaming-softmax kernel tiles queries by ATTN_TQ=16 and keys by
+    // ATTN_TK=32; sweep t = seq-1 over the shape edges: t = 1 (single
+    // query row), t < 32 (single partial key tile), and t not a multiple
+    // of either tile (ragged final query *and* key tiles)
+    let cfg = ModelConfig::by_name("tiny").unwrap();
+    let w = Weights::init(cfg, 41);
+    let mut r = Rng::new(42);
+    for seq in [2usize, 3, 17, 18, 33, 34, 49, 51] {
+        let b = 2usize;
+        let toks: Vec<i32> = (0..b * seq).map(|_| r.below(cfg.vocab) as i32).collect();
+        let got = fwd::nll(&w, &toks, b, seq);
+        let want = oracle::nll(&w, &toks, b, seq);
+        assert_eq!(got.len(), want.len(), "seq {seq}");
+        for (i, (g, o)) in got.iter().zip(&want).enumerate() {
+            assert!((g - o).abs() < 1e-5, "seq {seq} position {i}: {g} vs {o}");
+        }
+    }
+}
+
 // ----------------------------------------------------------- (b) factored
 
 #[test]
